@@ -1,0 +1,5 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run`` prints ``name,us_per_call,derived`` CSV rows
+and asserts the paper-claim reproductions.
+"""

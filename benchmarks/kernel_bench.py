@@ -1,0 +1,72 @@
+"""Kernel micro-benchmarks (interpret mode on CPU; TPU is the target).
+
+Timing numbers on CPU measure the *oracle path* (jnp) for throughput
+context; the Pallas kernels are validated for correctness and their TPU
+roofline expectations derived analytically.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, reps: int = 3) -> float:
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps * 1e6
+
+
+def dgemm_bench() -> List[Row]:
+    from repro.kernels.dgemm import dgemm_ref
+    from repro.roofline import hw
+    rows: List[Row] = []
+    for n in (512, 1024):
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, n), jnp.float32)
+        y = jax.random.normal(jax.random.PRNGKey(1), (n, n), jnp.float32)
+        f = jax.jit(dgemm_ref)
+        us = _timeit(lambda: jax.block_until_ready(f(x, y)))
+        fl = 2 * n ** 3
+        tpu_us = fl / hw.PEAK_BF16_FLOPS * 1e6
+        rows.append((f"dgemm/{n}", us,
+                     f"cpu_gflops={fl/us/1e3:.1f};tpu_roofline_us={tpu_us:.1f}"))
+    return rows
+
+
+def rmsnorm_bench() -> List[Row]:
+    from repro.kernels.rmsnorm import rmsnorm_ref
+    from repro.roofline import hw
+    rows: List[Row] = []
+    rows_n, d = 4096, 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows_n, d), jnp.bfloat16)
+    w = jnp.ones((d,), jnp.bfloat16)
+    f = jax.jit(rmsnorm_ref)
+    us = _timeit(lambda: jax.block_until_ready(f(x, w)))
+    by = rows_n * d * 2 * 2
+    rows.append((f"rmsnorm/{rows_n}x{d}", us,
+                 f"tpu_bw_bound_us={by/hw.HBM_BW*1e6:.1f}"))
+    return rows
+
+
+def attention_bench() -> List[Row]:
+    from repro.models.attention import blockwise_attention
+    rows: List[Row] = []
+    B, S, H, dh = 1, 1024, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, dh), jnp.float32)
+    for skip in (False, True):
+        f = jax.jit(lambda q, k, v, s=skip: blockwise_attention(
+            q, k, v, causal=True, q_chunk=128, kv_chunk=128, block_skip=s))
+        us = _timeit(lambda: jax.block_until_ready(f(q, k, v)))
+        rows.append((f"attention/block_skip={skip}", us,
+                     f"S={S};H={H}"))
+    return rows

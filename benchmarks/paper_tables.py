@@ -1,0 +1,227 @@
+"""Paper tables/figures as benchmark functions.
+
+Each function returns a list of (name, us_per_call, derived) CSV rows and
+raises AssertionError if a published number is not reproduced within
+tolerance — these are the paper-claims validation gates.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, reps: int = 3) -> float:
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps * 1e6
+
+
+# -- Table 1: LOEWE-CSC / Sanam / L-CSC node trend ---------------------------
+
+def table1_nodes() -> List[Row]:
+    from repro.configs.lcsc_lqcd import L_CSC, LOEWE_CSC, SANAM
+    rows: List[Row] = []
+    for node in (LOEWE_CSC, SANAM, L_CSC):
+        derived = (f"gpus={node.gpus};bw={node.gpu_peak_bandwidth_gbs}GB/s;"
+                   f"peak={node.peak_fp64_gflops}GF")
+        rows.append((f"table1/{node.name}", 0.0, derived))
+    # the published trend: each generation raises node bandwidth & peak
+    assert (LOEWE_CSC.gpu_peak_bandwidth_gbs < SANAM.gpu_peak_bandwidth_gbs
+            < L_CSC.gpu_peak_bandwidth_gbs)
+    assert L_CSC.peak_fp64_gflops / LOEWE_CSC.peak_fp64_gflops > 10
+    return rows
+
+
+# -- Fig 1a: DGEMM / HPL performance vs voltage -------------------------------
+
+def fig1a_perf_vs_voltage() -> List[Row]:
+    from repro.core.energy.power_model import V_MAX, V_MIN
+    from repro.core.energy.throttle import dgemm_perf_gflops, hpl_node_perf
+    rows: List[Row] = []
+    for v in np.linspace(V_MIN, V_MAX, 5):
+        d900 = dgemm_perf_gflops(900, v)
+        d774 = dgemm_perf_gflops(774, v)
+        h900 = hpl_node_perf(900, [v] * 4)
+        h774 = hpl_node_perf(774, [v] * 4)
+        rows.append((f"fig1a/v={v:.4f}", 0.0,
+                     f"dgemm900={d900:.0f};dgemm774={d774:.0f};"
+                     f"hpl900={h900:.0f};hpl774={h774:.0f}"))
+    # published anchors
+    assert abs(dgemm_perf_gflops(900, V_MIN) - 1250) < 30
+    assert 950 <= dgemm_perf_gflops(900, V_MAX) <= 1100
+    assert abs(hpl_node_perf(900, [V_MIN] * 4) - 6280) < 70
+    assert abs(hpl_node_perf(900, [V_MAX] * 4) - 6175) < 70
+    # flat profile at 774 MHz
+    p774 = [dgemm_perf_gflops(774, v) for v in np.linspace(V_MIN, V_MAX, 7)]
+    assert max(p774) - min(p774) < 1.0
+    return rows
+
+
+# -- Fig 1b: power vs fan / voltage / temperature -----------------------------
+
+def fig1b_power() -> List[Row]:
+    from repro.core.energy.power_model import (V_MIN, fan_power, gpu_power,
+                                               node_power)
+    rows: List[Row] = []
+    for s in (0.2, 0.4, 0.6, 0.8, 1.0):
+        rows.append((f"fig1b/fan={s:.1f}", 0.0, f"W={fan_power(s):.1f}"))
+    for t in (45, 55, 65, 75):
+        p = gpu_power(774, V_MIN, temp_c=t)
+        rows.append((f"fig1b/temp={t}C", 0.0, f"gpuW={p:.1f}"))
+    for v in (1.1425, 1.17, 1.2):
+        p = node_power(774, [v] * 4)
+        rows.append((f"fig1b/vid={v}", 0.0, f"nodeW={p:.1f}"))
+    # shape checks: steeper above 40% fan; power increases with V and T
+    assert (fan_power(0.6) - fan_power(0.5)) > (fan_power(0.4)
+                                                - fan_power(0.3))
+    assert gpu_power(774, 1.2) > gpu_power(774, V_MIN)
+    assert gpu_power(774, V_MIN, temp_c=75) > gpu_power(774, V_MIN,
+                                                        temp_c=45)
+    return rows
+
+
+# -- §2: HPL efficiency mode (real LU runs) -----------------------------------
+
+def hpl_modes() -> List[Row]:
+    from repro.config import EnergyConfig
+    from repro.configs.hpl import HPLConfig
+    from repro.hpl import linpack_run
+    rows: List[Row] = []
+    base = HPLConfig(n=256, block=64)
+    perf = linpack_run(base, energy=EnergyConfig(mode="performance"))
+    eff = linpack_run(base.efficiency(),
+                      energy=EnergyConfig(mode="efficiency",
+                                          max_perf_loss=0.05))
+    assert perf.passed and eff.passed
+    rows.append(("hpl/performance", perf.wall_s * 1e6,
+                 f"gflops={perf.gflops:.2f};resid={perf.residual:.3f};"
+                 f"freq={perf.energy_plan['freq_scale']:.2f}"))
+    rows.append(("hpl/efficiency", eff.wall_s * 1e6,
+                 f"gflops={eff.gflops:.2f};resid={eff.residual:.3f};"
+                 f"freq={eff.energy_plan['freq_scale']:.2f};"
+                 f"energy_j={eff.energy_plan['energy_per_run_j']:.2e}"))
+    # apples-to-apples plan comparison on the SAME workload: the efficiency
+    # plan derates the clock -> lower power (paper: trade a small perf
+    # fraction for better net MFLOPS/W)
+    eff_same = linpack_run(base, energy=EnergyConfig(mode="efficiency",
+                                                     max_perf_loss=0.05))
+    assert (eff_same.energy_plan["freq_scale"]
+            <= perf.energy_plan["freq_scale"] + 1e-9)
+    assert (eff_same.energy_plan["power_w"]
+            <= perf.energy_plan["power_w"] + 1e-9)
+    assert eff_same.energy_plan["perf_loss"] <= 0.05
+    return rows
+
+
+# -- §3: Green500 measurement levels ------------------------------------------
+
+def green500_levels() -> List[Row]:
+    from repro.core.energy import (level1_exploit, linpack_power_trace,
+                                   measure_efficiency)
+    from repro.core.energy.green500 import (extrapolation_error,
+                                            node_efficiencies)
+    rows: List[Row] = []
+    tr = linpack_power_trace(56, 1021.0, 5384.0, duration_s=1800.0)
+    for lvl in (1, 2, 3):
+        r = measure_efficiency(tr, lvl)
+        rows.append((f"green500/level{lvl}", 0.0,
+                     f"mflops_w={r.mflops_per_w:.1f};power={r.avg_power_w:.0f}"))
+    ex = level1_exploit(tr)
+    l3 = measure_efficiency(tr, 3)
+    over = ex.mflops_per_w / l3.mflops_per_w - 1
+    rows.append(("green500/l1_exploit", 0.0,
+                 f"mflops_w={ex.mflops_per_w:.1f};overestimate={over:.1%}"))
+    assert 0.10 < over < 0.45          # paper: up to ~30%
+    rng = np.random.default_rng(0)
+    effs = node_efficiencies(rng, 7)
+    rows.append(("green500/variability", 0.0,
+                 f"spread={np.ptp(effs)/effs.mean():.3%};"
+                 f"median_err={extrapolation_error(effs):.3%}"))
+    assert extrapolation_error(effs) < 0.01    # paper: <1% off level-3
+    return rows
+
+
+# -- §4: final result ---------------------------------------------------------
+
+def result_efficiency() -> List[Row]:
+    from repro.core.energy.power_model import V_MIN, node_power
+    from repro.core.energy.throttle import (HPL_GPU_UTIL,
+                                            gpu_power_throttled,
+                                            hpl_node_perf)
+    perf56 = hpl_node_perf(774, [V_MIN] * 4) * 56
+    pw = [gpu_power_throttled(774, V_MIN, util=HPL_GPU_UTIL)] * 4
+    power56 = node_power(774, [V_MIN] * 4, gpu_clamped_w=pw) * 56
+    eff = perf56 / power56 * 1000
+    assert abs(perf56 - 301.5e3) / 301.5e3 < 0.012   # 301.5 TFLOPS
+    assert abs(power56 - 57.2e3) / 57.2e3 < 0.012    # 57.2 kW
+    assert abs(eff - 5271.8) / 5271.8 < 0.012        # 5271.8 MFLOPS/W
+    return [("result/56_nodes", 0.0,
+             f"tflops={perf56/1000:.1f};kw={power56/1000:.2f};"
+             f"mflops_w={eff:.1f}")]
+
+
+# -- §4: D-slash efficiency sensitivity (<1.5% at efficiency clocks) ----------
+
+def dslash_bw() -> List[Row]:
+    import jax
+    import jax.numpy as jnp
+    from repro.config import EnergyConfig
+    from repro.configs.lcsc_lqcd import (DSLASH_BW_FRACTION,
+                                         DSLASH_GFLOPS_PER_S9150,
+                                         MULTI_GPU_SLOWDOWN, S9150_BW_GBS)
+    from repro.core.energy.dvfs import plan_frequency
+    from repro.lqcd import (dslash, dslash_bytes_per_site,
+                            dslash_flops_per_site, random_su3_field)
+    from repro.roofline import hw
+
+    rows: List[Row] = []
+    # wall-clock of the jnp reference on a small thermal lattice (CPU)
+    lat = (8, 8, 8, 8)
+    U = random_su3_field(jax.random.PRNGKey(0), lat)
+    kr, ki = jax.random.split(jax.random.PRNGKey(1))
+    psi = (jax.random.normal(kr, lat + (4, 3))
+           + 1j * jax.random.normal(ki, lat + (4, 3))).astype(jnp.complex64)
+    f = jax.jit(dslash)
+    us = _timeit(lambda: jax.block_until_ready(f(U, psi)))
+    vol = int(np.prod(lat))
+    rows.append(("dslash/jnp_8x8x8x8", us,
+                 f"gflops={vol*dslash_flops_per_site()/us/1e3:.2f}"))
+
+    # S9150 bandwidth model: published ~135 GFLOPS at 80% of 320 GB/s
+    # (fp64 with CL2QCD's 8-real gauge compression)
+    ai = dslash_flops_per_site() / dslash_bytes_per_site(8)
+    pred = ai * S9150_BW_GBS * DSLASH_BW_FRACTION
+    rows.append(("dslash/s9150_model", 0.0,
+                 f"pred_gflops={pred:.0f};paper={DSLASH_GFLOPS_PER_S9150}"))
+    assert abs(pred - DSLASH_GFLOPS_PER_S9150) / DSLASH_GFLOPS_PER_S9150 \
+        < 0.05
+
+    # multi-chip halo model: T-axis sharding moves 2 boundary spinor slices
+    # per chip per application over ICI; published single->multi ~20% loss
+    # (PCIe-era). On TPU ICI the predicted loss is smaller — both reported.
+    bytes_site = dslash_bytes_per_site(8)
+    t_local = 8
+    compute_s = bytes_site / (S9150_BW_GBS * 1e9 * DSLASH_BW_FRACTION)
+    halo_s = (2 / t_local) * (24 * 8) / 14e9        # PCIe gen3 eff ~14 GB/s
+    loss_pcie = halo_s / (compute_s + halo_s)
+    halo_tpu = (2 / t_local) * (24 * 8) / hw.ICI_LINK_BW
+    compute_tpu = bytes_site / (hw.HBM_BW * DSLASH_BW_FRACTION)
+    loss_tpu = halo_tpu / (compute_tpu + halo_tpu)
+    rows.append(("dslash/multichip_loss", 0.0,
+                 f"pcie={loss_pcie:.1%};tpu_ici={loss_tpu:.1%};"
+                 f"paper={MULTI_GPU_SLOWDOWN:.0%}"))
+    assert 0.10 < loss_pcie < 0.35                   # ~20% published
+
+    # DVFS derate: memory-bound D-slash loses <1.5% at efficiency clocks
+    plan = plan_frequency(0.25, 1.0, 0.0, flops_per_step=1e12,
+                          cfg=EnergyConfig(mode="efficiency"))
+    rows.append(("dslash/dvfs_derate", 0.0,
+                 f"freq={plan.freq_scale:.2f};loss={plan.perf_loss:.3%}"))
+    assert plan.perf_loss <= 0.015                   # paper: <1.5%
+    return rows

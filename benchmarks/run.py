@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV and fails if any published-number
+reproduction is out of tolerance.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables
+
+    benches = [
+        paper_tables.table1_nodes,
+        paper_tables.fig1a_perf_vs_voltage,
+        paper_tables.fig1b_power,
+        paper_tables.hpl_modes,
+        paper_tables.green500_levels,
+        paper_tables.result_efficiency,
+        paper_tables.dslash_bw,
+        kernel_bench.dgemm_bench,
+        kernel_bench.rmsnorm_bench,
+        kernel_bench.attention_bench,
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed.append((bench.__name__, e))
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {[n for n, _ in failed]}", file=sys.stderr)
+        raise SystemExit(1)
+    print("# all paper-claim reproductions within tolerance")
+
+
+if __name__ == "__main__":
+    main()

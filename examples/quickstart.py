@@ -1,0 +1,48 @@
+"""Quickstart: train a small LM for 40 steps, then greedy-decode from it.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.config import ShapeConfig, TrainConfig, smoke_config
+from repro.data import make_batch_iterator
+from repro.models import (forward_prefill, forward_decode, init_params)
+from repro.optim import adamw_init
+from repro.runtime.steps import make_train_step
+
+
+def main() -> None:
+    cfg = smoke_config("llama3-8b")
+    shape = ShapeConfig("quick", 128, 8, "train")
+    tc = TrainConfig(learning_rate=3e-3, total_steps=40, warmup_steps=4,
+                     remat="none")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, tc))
+    data = make_batch_iterator(cfg, shape)
+
+    print(f"training {cfg.name}: "
+          f"{sum(x.size for x in jax.tree.leaves(params)):,} params")
+    for i in range(40):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 10 == 0 or i == 39:
+            print(f"  step {i:3d}  loss {float(m['loss']):.4f}")
+
+    # generate a few tokens
+    prompt = {"tokens": jnp.asarray(next(data)["tokens"][:2, :16])}
+    logits, cache = forward_prefill(cfg, params, prompt)
+    toks = []
+    tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None]
+    for _ in range(8):
+        toks.append(int(tok[0, 0]))
+        logits, cache = forward_decode(cfg, params, tok.astype(jnp.int32),
+                                       cache)
+        tok = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1)[:, None]
+    print("generated:", toks)
+
+
+if __name__ == "__main__":
+    main()

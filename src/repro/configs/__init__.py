@@ -1,0 +1,20 @@
+"""Architecture configs. Importing this package registers every assigned arch.
+
+Each module defines ``full()`` (the exact published configuration) and
+``smoke()`` (a reduced same-family configuration for CPU tests) and calls
+``repro.config.register_arch``.
+"""
+from repro.configs import (  # noqa: F401
+    whisper_small,
+    grok1_314b,
+    deepseek_v2_236b,
+    qwen15_32b,
+    minitron_8b,
+    olmo_1b,
+    llama3_8b,
+    mamba2_370m,
+    llava_next_mistral_7b,
+    hymba_1_5b,
+    lcsc_lqcd,
+    hpl,
+)

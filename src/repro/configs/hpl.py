@@ -1,0 +1,28 @@
+"""HPL (Linpack) benchmark configuration — the paper's §2 workload.
+
+Mirrors HPL-GPU's two operating modes: ``performance`` and ``efficiency``
+(the efficiency mode sacrifices a small fraction of performance for lower
+power — paper §2 last paragraph).
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HPLConfig:
+    n: int = 1024                 # matrix size (CPU-scale default)
+    block: int = 128              # panel/update block size NB
+    lookahead: int = 1            # lookahead depth (HPL-GPU style)
+    mode: str = "performance"     # performance | efficiency
+    dtype: str = "float32"
+    seed: int = 7
+
+    def efficiency(self) -> "HPLConfig":
+        # Efficiency mode: smaller update tiles keep the chip below the
+        # throttle point; paired with the DVFS plan's derated clock.
+        return HPLConfig(n=self.n, block=max(32, self.block // 2),
+                         lookahead=self.lookahead, mode="efficiency",
+                         dtype=self.dtype, seed=self.seed)
+
+
+SMOKE_HPL = HPLConfig(n=192, block=32)
+DEFAULT_HPL = HPLConfig()

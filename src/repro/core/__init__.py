@@ -1,0 +1,8 @@
+"""The paper's primary contribution: energy-efficiency machinery (C1-C5).
+
+Subpackages:
+  energy/  power models, TDP throttle simulation, DVFS planning,
+           Green500 L1/L2/L3 measurement, variability, scheduling
+The LQCD application (C1) lives in ``repro.lqcd``; the HPL benchmark (C2)
+in ``repro.hpl``; both consume the models here.
+"""

@@ -1,0 +1,22 @@
+"""Energy core: power models, throttle simulation, DVFS planning,
+Green500 measurement methodology, chip variability, cluster scheduling."""
+from repro.core.energy.power_model import (  # noqa: F401
+    NodePowerModel,
+    S9150,
+    fan_power,
+    gpu_power,
+    node_power,
+    voltage_at,
+)
+from repro.core.energy.throttle import (  # noqa: F401
+    dgemm_perf_gflops,
+    hpl_node_perf,
+    sustained_frequency,
+)
+from repro.core.energy.dvfs import FreqPlan, plan_frequency  # noqa: F401
+from repro.core.energy.green500 import (  # noqa: F401
+    LinpackTrace,
+    level1_exploit,
+    linpack_power_trace,
+    measure_efficiency,
+)

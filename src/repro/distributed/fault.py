@@ -1,0 +1,81 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+At 1000+ nodes the failure modes this handles (paper-informed):
+  * hard node loss      -> checkpoint/restart, elastically resharded onto
+                           the surviving mesh (CheckpointManager.restore)
+  * numerics blow-up    -> NaN/inf step detection, rollback + LR cut
+  * stragglers          -> per-step wall-time EWMA; persistent outliers
+                           trigger the scheduler's frequency-floor plan
+                           (the paper's flat-774 profile) or pod drop
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class StepHealth:
+    step: int
+    wall_s: float
+    loss: float
+    ok: bool
+    reason: str = ""
+
+
+@dataclass
+class FaultPolicy:
+    max_retries: int = 2
+    nan_lr_cut: float = 0.5
+    straggler_ewma: float = 0.9
+    straggler_threshold: float = 1.25   # x median step time
+    checkpoint_every: int = 100
+
+
+class FaultTolerantLoop:
+    """Wraps a step callable with detection/rollback bookkeeping.
+
+    The step fn is pure (params, opt, batch) -> (params, opt, metrics); the
+    loop owns the last-good snapshot reference (a checkpoint step id).
+    """
+
+    def __init__(self, policy: FaultPolicy = FaultPolicy()):
+        self.policy = policy
+        self.ewma_wall: Optional[float] = None
+        self.history: List[StepHealth] = []
+        self.rollbacks = 0
+
+    def observe(self, step: int, wall_s: float, loss: float) -> StepHealth:
+        ok = math.isfinite(loss)
+        reason = "" if ok else "non-finite loss"
+        if self.ewma_wall is None:
+            self.ewma_wall = wall_s
+        else:
+            a = self.policy.straggler_ewma
+            self.ewma_wall = a * self.ewma_wall + (1 - a) * wall_s
+        h = StepHealth(step, wall_s, loss, ok, reason)
+        self.history.append(h)
+        return h
+
+    def is_straggling(self, wall_s: float) -> bool:
+        return (self.ewma_wall is not None
+                and wall_s > self.policy.straggler_threshold * self.ewma_wall)
+
+    def should_rollback(self, h: StepHealth) -> bool:
+        if h.ok:
+            return False
+        self.rollbacks += 1
+        return self.rollbacks <= self.policy.max_retries
+
+    def straggler_report(self) -> Dict[str, float]:
+        walls = np.asarray([h.wall_s for h in self.history] or [0.0])
+        return {
+            "median_step_s": float(np.median(walls)),
+            "p99_step_s": float(np.percentile(walls, 99)),
+            "straggler_ratio": float(np.percentile(walls, 99)
+                                     / max(np.median(walls), 1e-9)),
+        }

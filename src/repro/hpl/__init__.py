@@ -1,0 +1,3 @@
+"""HPL (Linpack) — the paper's §2 benchmark, as blocked LU in JAX."""
+from repro.hpl.lu import blocked_lu, lu_solve  # noqa: F401
+from repro.hpl.linpack import linpack_run, linpack_residual  # noqa: F401

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package ships three files:
+  kernel.py — ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (interpret-mode switch for CPU)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+  dslash   — Wilson D-slash stencil (the paper's memory-bound hotspot, C1)
+  dgemm    — tiled matmul (HPL trailing update, C2)
+  rmsnorm  — fused RMSNorm (LM substrate hot spot)
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.dgemm.ops import dgemm  # noqa: F401
+from repro.kernels.dgemm.ref import dgemm_ref  # noqa: F401

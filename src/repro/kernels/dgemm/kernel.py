@@ -1,0 +1,54 @@
+"""Tiled matmul Pallas kernel (the HPL trailing-update hot spot).
+
+Grid (M/bm, N/bn, K/bk); each (i, j) tile owns an fp32 VMEM accumulator
+that integrates over the k-steps; MXU-aligned block shapes (multiples of
+128 on the matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 256,
+                  bn: int = 256, bk: int = 256, out_dtype=None,
+                  interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) @ y: (K, N) -> (M, N); fp32 accumulation in VMEM."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"dims ({m},{n},{k}) must tile by ({bm},{bn},{bk})")
+    out_dtype = out_dtype or x.dtype
+    k_steps = k // bk
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,25 @@
+"""Public jit'd wrapper for the dgemm Pallas kernel.
+
+``interpret=None`` auto-selects: compiled on TPU, interpret mode on CPU
+(the container validates kernels in interpret mode; TPU is the target).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dgemm.kernel import matmul_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def dgemm(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+          bk: int = 256, interpret: bool | None = None) -> jnp.ndarray:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)

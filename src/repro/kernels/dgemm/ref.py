@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the dgemm kernel."""
+import jax.numpy as jnp
+
+
+def dgemm_ref(x: jnp.ndarray, y: jnp.ndarray, out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32),
+                   y.astype(jnp.float32)).astype(out_dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.dslash.ops import dslash_pallas  # noqa: F401
+from repro.kernels.dslash.ref import dslash_ref  # noqa: F401

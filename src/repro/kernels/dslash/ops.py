@@ -1,0 +1,21 @@
+"""Public jit'd wrapper: complex-field D-slash backed by the Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dslash.kernel import dslash_split
+from repro.kernels.dslash.ref import from_split, to_split
+
+
+@partial(jax.jit, static_argnames=("t_block", "interpret"))
+def dslash_pallas(U: jnp.ndarray, psi: jnp.ndarray, *, t_block: int = 4,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Complex-in/complex-out D-slash via the split-field Pallas kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    out_s = dslash_split(to_split(U), to_split(psi), t_block=t_block,
+                         interpret=interpret)
+    return from_split(out_s)

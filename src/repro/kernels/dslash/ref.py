@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: the complex reference D-slash from repro.lqcd."""
+import jax.numpy as jnp
+
+from repro.lqcd.dirac import dslash
+
+
+def to_split(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.stack([jnp.real(x), jnp.imag(x)], axis=-1).astype(jnp.float32)
+
+
+def from_split(x: jnp.ndarray) -> jnp.ndarray:
+    return (x[..., 0] + 1j * x[..., 1]).astype(jnp.complex64)
+
+
+def dslash_ref(U: jnp.ndarray, psi: jnp.ndarray) -> jnp.ndarray:
+    """Complex-field reference."""
+    return dslash(U, psi)
+
+
+def dslash_ref_split(U_s: jnp.ndarray, psi_s: jnp.ndarray) -> jnp.ndarray:
+    """Split-field reference (same I/O convention as the kernel)."""
+    return to_split(dslash(from_split(U_s), from_split(psi_s)))

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the rmsnorm Pallas kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6,
+            block_rows: int = 256,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Fused RMSNorm over the last dim; accepts (..., d)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    rows = x2.shape[0]
+    br = block_rows
+    while rows % br:
+        br //= 2
+    y = rmsnorm_pallas(x2, w, eps=eps, block_rows=max(br, 1),
+                       interpret=interpret)
+    return y.reshape(shape)

@@ -1,0 +1,77 @@
+"""Mamba-2 SSD within-chunk kernel (the hot inner block of the chunked
+scan): given one chunk's x, dt, B, C and the incoming state h, produce the
+chunk's outputs and the outgoing state — all in VMEM.
+
+Grid = (batch, n_chunks is handled by the outer lax.scan; here we grid over
+batch x heads) so each program instance owns a (Q, P) x (Q, N) working set:
+the (Q, Q) decay matrix, the C·Bᵀ scores, and the state update — the exact
+arithmetic of `repro.models.ssm.ssd_chunked`'s chunk_step, fused.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h_ref, y_ref,
+                h_out_ref):
+    x = x_ref[...].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[...].astype(jnp.float32)      # (Q,)
+    a = a_ref[0]                              # scalar per head
+    bm = b_ref[...].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[...].astype(jnp.float32)       # (Q, N)
+    h = h_ref[...].astype(jnp.float32)        # (P, N)
+
+    q = x.shape[0]
+    la = dt * a                               # (Q,) log decay
+    cs = jnp.cumsum(la)
+    diff = cs[:, None] - cs[None, :]          # (Q, Q)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    iotb = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lm = jnp.exp(jnp.where(iota >= iotb, diff, -1e30))
+    scores = (cm @ bm.T) * lm * dt[None, :]   # (Q, Q)
+    y = scores @ x                            # intra-chunk
+    y = y + (cm * jnp.exp(cs)[:, None]) @ h.T   # inter-chunk
+    decay_end = jnp.exp(cs[-1] - cs) * dt     # (Q,)
+    h_new = h * jnp.exp(cs[-1]) + x.T @ (bm * decay_end[:, None])
+    y_ref[...] = y.astype(y_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+def ssd_chunk_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                     B_mat: jnp.ndarray, C_mat: jnp.ndarray,
+                     h: jnp.ndarray, *, interpret: bool = False):
+    """One chunk for all batches/heads.
+
+    x: (B, Q, H, P); dt: (B, Q, H); A: (H,); B_mat/C_mat: (B, Q, N)
+    (group-broadcast done by the caller); h: (B, H, P, N).
+    Returns (y (B, Q, H, P), h_new (B, H, P, N)).
+    """
+    Bb, Q, H, P = x.shape
+    N = B_mat.shape[-1]
+    grid = (Bb, H)
+    y, h_new = pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, Q, None, P), lambda b, h_: (b, 0, h_, 0)),
+            pl.BlockSpec((None, Q, None), lambda b, h_: (b, 0, h_)),
+            pl.BlockSpec((1,), lambda b, h_: (h_,)),
+            pl.BlockSpec((None, Q, N), lambda b, h_: (b, 0, 0)),
+            pl.BlockSpec((None, Q, N), lambda b, h_: (b, 0, 0)),
+            pl.BlockSpec((None, None, P, N), lambda b, h_: (b, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, None, P), lambda b, h_: (b, 0, h_, 0)),
+            pl.BlockSpec((None, None, P, N), lambda b, h_: (b, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B_mat, C_mat, h)
+    return y, h_new

@@ -1,0 +1,16 @@
+"""Public jit'd wrapper for the SSD chunk kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_chunk.kernel import ssd_chunk_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, A, B_mat, C_mat, h, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_chunk_pallas(x, dt, A, B_mat, C_mat, h, interpret=interpret)

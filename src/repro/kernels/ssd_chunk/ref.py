@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: one SSD chunk via the model's chunked implementation."""
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_chunk_ref(x, dt, A, B_mat, C_mat, h):
+    """Same I/O as the kernel; B_mat/C_mat: (B, Q, N) single-group."""
+    y, h_new = ssd_chunked(x, dt, A, B_mat[:, :, None, :],
+                           C_mat[:, :, None, :], chunk=x.shape[1], h0=h)
+    return y, h_new

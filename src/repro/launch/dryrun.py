@@ -1,0 +1,342 @@
+import os
+# 512 placeholder devices for the production mesh; LICM disabled because
+# XLA:CPU hoists bf16->f32 weight upcasts out of the layer scan (a CPU
+# artifact — TPU MXUs consume bf16 natively), inflating memory_analysis.
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, record memory/cost/collective analysis.
+
+The two lines above MUST stay first: JAX locks the device count on first
+initialization, and the dry-run (only) needs 512 placeholder host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--resume]
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+
+from repro.config import (ARCH_IDS, SHAPES, MeshConfig, ModelConfig,
+                          ShapeConfig, TrainConfig, full_config,
+                          shape_applicable)
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
+                                        named_shardings, param_bytes,
+                                        param_pspecs)
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.launch.specs import (decode_input_specs, input_specs,
+                                should_quantize_kv)
+from repro.models import init_decode_cache, init_params
+from repro.optim import adamw_init
+from repro.roofline import analyze_compiled, model_flops
+from repro.roofline import hw
+from repro.roofline.analytic import cost_for
+from repro.runtime.memplan import auto_train_plan
+from repro.runtime.steps import (make_decode_step, make_prefill_step,
+                                 make_train_step)
+
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.distributed.sharding import pick
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _cell_name(arch: str, shape: str, multi_pod: bool, variant: str) -> str:
+    mesh = "pod2" if multi_pod else "pod1"
+    return f"{arch}--{shape}--{mesh}--{variant}"
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, mesh_cfg: MeshConfig,
+               variant: str = "baseline"):
+    """Build + lower + compile one cell.
+
+    Returns (compiled, lower_s, compile_s, plan_info)."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(partial(init_params, cfg), key)
+    block_skip = "block_skip" in variant
+    serve_mode = "serve" if shape.kind != "train" else "train"
+    if "serve_fsdp" in variant:
+        serve_mode = "train"          # force FSDP specs even for serving
+    ep_data = "serve_ep" in variant and cfg.moe.enabled
+    # serve mode: TP-only weights must leave room for the KV cache
+    tp_only = False
+    if serve_mode == "serve":
+        from repro.models.transformer import kv_cache_bytes
+        from repro.launch.specs import should_quantize_kv
+        cache_b = kv_cache_bytes(cfg, shape.global_batch, shape.seq_len)
+        if should_quantize_kv(cfg, shape, mesh_cfg.n_devices):
+            cache_b //= 2
+        budget = SERVE_TP_ONLY_BUDGET
+        if "tp_push" in variant:
+            budget = 15 * 2**30       # push closer to the 16 GiB chip
+        budget_left = budget - cache_b // mesh_cfg.n_devices
+        tp_only = (param_bytes(params_sds) // mesh_cfg.model_size
+                   <= max(budget_left, 0))
+    pspecs = param_pspecs(cfg, params_sds, mesh_cfg, mode=serve_mode,
+                          serve_tp_only=tp_only, moe_ep_data=ep_data)
+    pshard = named_shardings(mesh, pspecs)
+    moe_fsdp = not (tp_only or ep_data)
+    plan_info = {"serve_tp_only": tp_only, "moe_ep_data": ep_data}
+
+    if shape.kind == "train":
+        tc = auto_train_plan(cfg, shape, mesh_cfg)
+        plan_info.update(microbatches=tc.microbatches,
+                         moment_dtype=tc.moment_dtype,
+                         grad_accum_dtype=tc.grad_accum_dtype,
+                         remat=tc.remat)
+        plan_info["tc"] = tc
+        batch = input_specs(cfg, shape)
+        bshard = named_shardings(
+            mesh, batch_pspecs(cfg, batch, mesh_cfg))
+        opt_sds = jax.eval_shape(
+            partial(adamw_init, moment_dtype=jnp.dtype(tc.moment_dtype)),
+            params_sds)
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        oshard = named_shardings(mesh, ospecs)
+        step = make_train_step(cfg, tc, mesh=mesh, mesh_cfg=mesh_cfg,
+                               block_skip=block_skip)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+        t0 = time.time()
+        lowered = jitted.lower(params_sds, opt_sds, batch)
+    elif shape.kind == "prefill":
+        quant = should_quantize_kv(cfg, shape, mesh_cfg.n_devices)
+        plan_info["kv_cache_int8"] = quant
+        batch = input_specs(cfg, shape)
+        bshard = named_shardings(mesh, batch_pspecs(cfg, batch, mesh_cfg))
+        step = make_prefill_step(cfg, mesh=mesh, mesh_cfg=mesh_cfg,
+                                 block_skip=block_skip, moe_fsdp=moe_fsdp,
+                                 quantize_kv_cache=quant)
+        cache_sds = jax.eval_shape(step, params_sds, batch)[1]
+        cspecs = cache_pspecs(cfg, cache_sds, mesh_cfg)
+        cshard = named_shardings(mesh, cspecs)
+        logits_shard = NamedSharding(mesh, pick(
+            (shape.global_batch, cfg.vocab_padded),
+            [P(mesh_cfg.data_axes, "model"), P(None, "model"), P()],
+            mesh_cfg))
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=(logits_shard, cshard))
+        t0 = time.time()
+        lowered = jitted.lower(params_sds, batch)
+    elif "replica1" in variant:         # replica-parallel: 1 chip/stream
+        quant = should_quantize_kv(cfg, shape, 1)
+        plan_info["kv_cache_int8"] = quant
+        plan_info["replicas"] = mesh_cfg.n_devices
+        tokens, cache_sds = decode_input_specs(cfg, shape,
+                                               quantize_kv_cache=quant)
+        step = make_decode_step(cfg)     # unsharded per-replica program
+        jitted = jax.jit(step)
+        t0 = time.time()
+        lowered = jitted.lower(params_sds, tokens, cache_sds)
+    else:                               # decode
+        quant = should_quantize_kv(cfg, shape, mesh_cfg.n_devices)
+        plan_info["kv_cache_int8"] = quant
+        tokens, cache_sds = decode_input_specs(cfg, shape,
+                                               quantize_kv_cache=quant)
+        cspecs = cache_pspecs(cfg, cache_sds, mesh_cfg)
+        cshard = named_shardings(mesh, cspecs)
+        tshard = named_shardings(
+            mesh, batch_pspecs(cfg, {"tokens": tokens}, mesh_cfg))["tokens"]
+        logits_shard = NamedSharding(mesh, pick(
+            (shape.global_batch, cfg.vocab_padded),
+            [P(mesh_cfg.data_axes, "model"), P(None, "model"), P()],
+            mesh_cfg))
+        step = make_decode_step(cfg, mesh=mesh, mesh_cfg=mesh_cfg,
+                                moe_fsdp=moe_fsdp, moe_ep_data=ep_data)
+        jitted = jax.jit(step, in_shardings=(pshard, tshard, cshard),
+                         out_shardings=(logits_shard, cshard),
+                         donate_argnums=(2,))
+        t0 = time.time()
+        lowered = jitted.lower(params_sds, tokens, cache_sds)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    print(compiled.memory_analysis())   # proves it fits
+    ca = compiled.cost_analysis()
+    print({k: v for k, v in (ca or {}).items()
+           if k in ("flops", "bytes accessed")})  # FLOPs/bytes for §Roofline
+    return compiled, t1 - t0, t2 - t1, plan_info
+
+
+from repro.distributed.sharding import SERVE_TP_ONLY_BUDGET
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Path, variant: str = "baseline",
+             resume: bool = False) -> dict:
+    name = _cell_name(arch, shape_name, multi_pod, variant)
+    out_path = out_dir / f"{name}.json"
+    if resume and out_path.exists():
+        rec = json.loads(out_path.read_text())
+        print(f"[dryrun] {name}: cached ({rec.get('status')})")
+        return rec
+
+    cfg = full_config(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "status": "pending",
+    }
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", reason=reason)
+        _write(out_path, rec)
+        print(f"[dryrun] {name}: SKIP ({reason})")
+        return rec
+
+    try:
+        mesh_cfg = mesh_config(multi_pod=multi_pod)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        compiled, lower_s, compile_s, plan = lower_cell(
+            cfg, shape, mesh, mesh_cfg, variant)
+        n_dev = mesh_cfg.n_devices
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mf = model_flops(cfg.param_count(), cfg.active_param_count(), tokens,
+                         shape.kind)
+        terms = analyze_compiled(compiled, n_dev, mf,
+                                 pod_size=256 if multi_pod else 0)
+        # analytic model (XLA:CPU cost analysis counts loop bodies once)
+        replicas = mesh_cfg.n_devices if "replica1" in variant else 1
+        ac = cost_for(cfg, shape, mesh_cfg, plan.get("tc"),
+                      block_skip="block_skip" in variant,
+                      serve_tp_only=plan.get("serve_tp_only", True),
+                      kv_int8=plan.get("kv_cache_int8", False),
+                      moe_ep=plan.get("moe_ep_data", False),
+                      replicas=replicas)
+        plan.pop("tc", None)
+        # decode is bandwidth-bound: useful bytes = one read of the (active)
+        # weights + one read of the KV/state cache per step, per chip
+        bw_useful = None
+        if shape.kind == "decode":
+            key2 = jax.random.PRNGKey(0)
+            params_sds2 = jax.eval_shape(partial(init_params, cfg), key2)
+            _, cache_sds2 = decode_input_specs(
+                cfg, shape,
+                quantize_kv_cache=plan.get("kv_cache_int8", False))
+            pb = param_bytes(params_sds2)
+            cb = param_bytes(cache_sds2)
+            active_frac = cfg.active_param_count() / max(cfg.param_count(), 1)
+            # replica-parallel serving: each replica holds the full model
+            chips_per_replica = n_dev // replicas
+            useful = (pb * active_frac + cb) / chips_per_replica
+            bw_useful = useful / max(ac.hbm_bytes, 1.0)
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                mem_rec[f] = int(getattr(mem, f, 0))
+            mem_rec["total_hbm_bytes"] = (
+                mem_rec.get("argument_size_in_bytes", 0)
+                + mem_rec.get("output_size_in_bytes", 0)
+                + mem_rec.get("temp_size_in_bytes", 0)
+                - mem_rec.get("alias_size_in_bytes", 0))
+        an_terms = {"compute": ac.compute_s, "memory": ac.memory_s,
+                    "collective": ac.collective_s}
+        dominant = max(an_terms, key=an_terms.get)
+        step_lb = max(an_terms.values())
+        useful_frac = (mf / n_dev / step_lb) / hw.PEAK_BF16_FLOPS             if step_lb > 0 else 0.0
+        rec.update(
+            status="ok",
+            lower_s=round(lower_s, 2), compile_s=round(compile_s, 2),
+            n_devices=n_dev,
+            plan=plan,
+            memory=mem_rec,
+            fits_hbm=bool(mem_rec.get("total_hbm_bytes", 0) <= 16 * 2**30),
+            roofline={
+                "compute_s": ac.compute_s,
+                "memory_s": ac.memory_s,
+                "collective_s": ac.collective_s,
+                "dominant": dominant,
+                "flops_per_chip": ac.flops,
+                "hbm_bytes_per_chip": ac.hbm_bytes,
+                "ici_bytes_per_chip": ac.ici_bytes,
+                "dcn_bytes_per_chip": ac.dcn_bytes,
+                "model_flops": mf,
+                "useful_ratio": mf / max(ac.flops * n_dev, 1.0),
+                "step_lower_bound_s": step_lb,
+                "roofline_fraction": useful_frac,
+                "bw_useful_ratio": bw_useful,
+                "detail": ac.detail,
+            },
+            xla_cost={
+                "flops_per_chip_body_once": terms.hlo_flops,
+                "bytes_per_chip_body_once": terms.hlo_bytes,
+                "ici_bytes_body_once": terms.ici_bytes,
+                "dcn_bytes_body_once": terms.dcn_bytes,
+            },
+            collectives=terms.collectives,
+        )
+        print(f"[dryrun] {name}: OK compile={compile_s:.0f}s "
+              f"dominant={dominant} "
+              f"hbm={mem_rec.get('total_hbm_bytes', 0)/2**30:.2f}GiB "
+              f"frac={useful_frac:.3f}")
+    except Exception as e:  # noqa: BLE001 — sweep must survive cell failures
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {name}: ERROR {type(e).__name__}: {e}")
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: Path, rec: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1, default=float))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    args = ap.parse_args()
+
+    cells = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for a in ARCH_IDS:
+                for s in SHAPES:
+                    cells.append((a, s, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_ok = n_skip = n_err = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, args.out, args.variant, args.resume)
+        st = rec["status"]
+        n_ok += st == "ok"
+        n_skip += st == "skip"
+        n_err += st == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_err} error "
+          f"of {len(cells)}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs`` builds the training/prefill batch; ``decode_input_specs``
+builds (tokens, cache) for one serve_step against a full KV/state cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import init_decode_cache
+from repro.models.frontend import enc_len_for
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for train_step / prefill_step."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        n_p = cfg.n_patches
+        batch["tokens"] = SDS((B, S - n_p), jnp.int32)
+        batch["patch_embeds"] = SDS((B, n_p, cfg.d_model), dt)
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S - n_p), jnp.int32)
+    elif cfg.family == "encdec":
+        batch["tokens"] = SDS((B, S), jnp.int32)
+        batch["frame_embeds"] = SDS((B, enc_len_for(cfg, S), cfg.d_model), dt)
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+KV_QUANT_THRESHOLD = 6 * 2**30      # per-chip bf16 cache bytes triggering int8
+
+
+def should_quantize_kv(cfg: ModelConfig, shape: ShapeConfig,
+                       n_devices: int = 256) -> bool:
+    from repro.models.transformer import kv_cache_bytes
+    return (kv_cache_bytes(cfg, shape.global_batch, shape.seq_len)
+            / n_devices > KV_QUANT_THRESHOLD)
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       quantize_kv_cache: bool = False,
+                       ) -> Tuple[Any, Dict[str, Any]]:
+    """(token, cache) stand-ins for one decode step at cache length S."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = SDS((B, 1), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, B, S,
+                                  quantize_kv_cache=quantize_kv_cache))
+    return tokens, cache

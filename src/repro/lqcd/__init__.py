@@ -1,0 +1,15 @@
+"""Lattice QCD substrate — the L-CSC cluster's primary workload (paper C1).
+
+Wilson-Dirac D-slash (the memory-bound hotspot), even-odd preconditioning,
+and a conjugate-gradient solver for the Dirac equation, in JAX.  The Pallas
+TPU kernel for D-slash lives in ``repro.kernels.dslash``.
+"""
+from repro.lqcd.su3 import random_su3_field, su3_project  # noqa: F401
+from repro.lqcd.dirac import (  # noqa: F401
+    GAMMA,
+    dslash,
+    wilson_matvec,
+    dslash_flops_per_site,
+    dslash_bytes_per_site,
+)
+from repro.lqcd.cg import cg_solve, solve_wilson  # noqa: F401

@@ -1,0 +1,80 @@
+"""Multi-chip D-slash: lattice time-axis sharded over the model axis with
+halo exchange via ``collective_permute`` (the paper's multi-GPU lattice mode;
+published observation: ~20% slowdown vs single-GPU — our ICI roofline model
+re-derives that in benchmarks/dslash_bw.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.lqcd.dirac import EYE4, GAMMA
+
+
+def _halo_exchange(x: jnp.ndarray, axis_name: str, t_axis: int):
+    """Returns (from_next_first_slice, from_prev_last_slice)."""
+    n = jax.lax.axis_size(axis_name)
+    idx = jnp.arange(n)
+    fwd_perm = [(int(i), int((i - 1) % n)) for i in range(n)]   # to prev
+    bwd_perm = [(int(i), int((i + 1) % n)) for i in range(n)]   # to next
+    first = jax.lax.slice_in_dim(x, 0, 1, axis=t_axis)
+    last = jax.lax.slice_in_dim(x, x.shape[t_axis] - 1, x.shape[t_axis],
+                                axis=t_axis)
+    from_next = jax.lax.ppermute(first, axis_name, fwd_perm)
+    from_prev = jax.lax.ppermute(last, axis_name, bwd_perm)
+    return from_next, from_prev
+
+
+def _dslash_local(U_loc: jnp.ndarray, psi_loc: jnp.ndarray,
+                  axis_name: str) -> jnp.ndarray:
+    """D-slash body on a T-sharded block: x/y/z via local rolls; T via halos."""
+    out = jnp.zeros_like(psi_loc)
+    # spatial directions: fully local (periodic within the global lattice —
+    # x/y/z are unsharded)
+    for mu in range(3):
+        g = GAMMA[mu]
+        u = U_loc[mu]
+        psi_f = jnp.roll(psi_loc, -1, axis=mu)
+        hop_f = jnp.einsum("...ab,...sb->...sa", u, psi_f)
+        out = out + jnp.einsum("st,...ta->...sa", EYE4 - g, hop_f)
+        u_b = jnp.roll(u, 1, axis=mu)
+        psi_b = jnp.roll(psi_loc, 1, axis=mu)
+        hop_b = jnp.einsum("...ba,...sb->...sa", jnp.conj(u_b), psi_b)
+        out = out + jnp.einsum("st,...ta->...sa", EYE4 + g, hop_b)
+    # time direction: halo exchange over the mesh axis
+    T_AX = 3
+    g = GAMMA[3]
+    u_t = U_loc[3]
+    psi_next, psi_prev = _halo_exchange(psi_loc, axis_name, T_AX)
+    u_prev_last = _halo_exchange(u_t, axis_name, T_AX)[1]
+    psi_f = jnp.concatenate(
+        [jax.lax.slice_in_dim(psi_loc, 1, psi_loc.shape[T_AX], axis=T_AX),
+         psi_next], axis=T_AX)
+    hop_f = jnp.einsum("...ab,...sb->...sa", u_t, psi_f)
+    out = out + jnp.einsum("st,...ta->...sa", EYE4 - g, hop_f)
+    psi_b = jnp.concatenate(
+        [psi_prev,
+         jax.lax.slice_in_dim(psi_loc, 0, psi_loc.shape[T_AX] - 1,
+                              axis=T_AX)], axis=T_AX)
+    u_b = jnp.concatenate(
+        [u_prev_last,
+         jax.lax.slice_in_dim(u_t, 0, u_t.shape[T_AX] - 1, axis=T_AX)],
+        axis=T_AX)
+    hop_b = jnp.einsum("...ba,...sb->...sa", jnp.conj(u_b), psi_b)
+    out = out + jnp.einsum("st,...ta->...sa", EYE4 + g, hop_b)
+    return out
+
+
+def dslash_sharded(U: jnp.ndarray, psi: jnp.ndarray, mesh,
+                   axis_name: str = "model") -> jnp.ndarray:
+    """D-slash with the lattice T axis sharded over ``axis_name``."""
+    u_spec = P(None, None, None, None, axis_name, None, None)
+    psi_spec = P(None, None, None, axis_name, None, None)
+    return jax.shard_map(
+        partial(_dslash_local, axis_name=axis_name),
+        mesh=mesh, in_specs=(u_spec, psi_spec), out_specs=psi_spec,
+        check_vma=False)(U, psi)

@@ -1,0 +1,49 @@
+"""SU(3) gauge-field helpers."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def random_su3(key, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Random SU(3) matrices of shape (*shape, 3, 3) complex64.
+
+    Gram-Schmidt (QR) of a random complex matrix, phase-fixed to det=1.
+    """
+    kr, ki = jax.random.split(key)
+    m = (jax.random.normal(kr, shape + (3, 3))
+         + 1j * jax.random.normal(ki, shape + (3, 3))).astype(jnp.complex64)
+    q, r = jnp.linalg.qr(m)
+    # make R's diagonal real-positive so Q is uniquely unitary
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    ph = d / jnp.abs(d)
+    q = q * jnp.conj(ph)[..., None, :]
+    # project U(3) -> SU(3): divide by cube root of determinant
+    det = jnp.linalg.det(q)
+    q = q * (jnp.conj(det) ** (1.0 / 3.0))[..., None, None]
+    return q.astype(jnp.complex64)
+
+
+def random_su3_field(key, lattice_shape: Tuple[int, int, int, int],
+                     ) -> jnp.ndarray:
+    """Gauge field U_mu(x): shape (4, X, Y, Z, T, 3, 3)."""
+    return random_su3(key, (4,) + tuple(lattice_shape))
+
+
+def su3_project(m: jnp.ndarray) -> jnp.ndarray:
+    """Project arbitrary 3x3 matrices back onto SU(3) (reunitarization)."""
+    q, r = jnp.linalg.qr(m)
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    ph = d / jnp.abs(d)
+    q = q * jnp.conj(ph)[..., None, :]
+    det = jnp.linalg.det(q)
+    return q * (jnp.conj(det) ** (1.0 / 3.0))[..., None, None]
+
+
+def unitarity_defect(u: jnp.ndarray) -> jnp.ndarray:
+    """max |U U† − 1| — 0 for exact SU(3)."""
+    eye = jnp.eye(3, dtype=u.dtype)
+    uu = jnp.einsum("...ab,...cb->...ac", u, jnp.conj(u))
+    return jnp.max(jnp.abs(uu - eye))

@@ -1,0 +1,8 @@
+"""Model substrate: unified transformer covering every assigned family."""
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward_train_loss,
+    forward_prefill,
+    forward_decode,
+    init_decode_cache,
+)

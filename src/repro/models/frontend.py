@@ -1,0 +1,49 @@
+"""Modality frontend STUBS (per assignment).
+
+``[audio]`` (whisper) and ``[vlm]`` (llava) entries specify the transformer
+backbone only; ``input_specs()`` provides precomputed frame/patch embeddings.
+Here we keep only the learnable glue: a projection of the precomputed
+embeddings into the backbone width (llava's mm-projector; whisper's
+post-conv linear), plus sinusoidal positions for the audio encoder.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import param_dtype
+
+Params = Dict[str, jnp.ndarray]
+
+
+def enc_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    """Audio stub: conv frontend downsamples dec_len by encoder_ratio."""
+    return max(1, seq_len // cfg.encoder_ratio)
+
+
+def init_frontend(cfg: ModelConfig, key) -> Params:
+    if cfg.frontend == "none":
+        return {}
+    d = cfg.d_model
+    dt = param_dtype(cfg)
+    w = (jax.random.normal(key, (d, d), jnp.float32) * 0.02).astype(dt)
+    return {"proj_w": w, "proj_b": jnp.zeros((d,), dt)}
+
+
+def apply_frontend(cfg: ModelConfig, p: Params,
+                   embeds: jnp.ndarray) -> jnp.ndarray:
+    """Project precomputed frame/patch embeddings into the backbone."""
+    return jnp.einsum("bsd,de->bse", embeds, p["proj_w"]) + p["proj_b"]
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d_model)
+    pe = jnp.zeros((length, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d_model - d_model // 2)]))
+    return pe

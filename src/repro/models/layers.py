@@ -1,0 +1,146 @@
+"""Shared layers: norms, embeddings, RoPE, MLP variants.
+
+All functions are pure; parameters are plain dict pytrees so they stack
+cleanly on a leading layer axis for ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, key) -> Params:
+    if cfg.norm_variant == "nonparametric_ln":
+        return {}
+    d = cfg.d_model
+    p = {"scale": jnp.ones((d,), param_dtype(cfg))}
+    if cfg.norm_variant == "layernorm":
+        p["bias"] = jnp.zeros((d,), param_dtype(cfg))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_variant == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:  # layernorm / nonparametric_ln
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm_variant == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(cfg: ModelConfig, key) -> Params:
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    tok = jax.random.normal(key, (cfg.vocab_padded, cfg.d_model), jnp.float32)
+    return {"tokens": (tok * scale).astype(param_dtype(cfg))}
+
+
+def embed_tokens(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def init_lm_head(cfg: ModelConfig, key) -> Params:
+    if cfg.tie_embeddings:
+        return {}
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    w = jax.random.normal(key, (cfg.d_model, cfg.vocab_padded), jnp.float32)
+    return {"w": (w * scale).astype(param_dtype(cfg))}
+
+
+def lm_head_logits(cfg: ModelConfig, embed_p: Params, head_p: Params,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = embed_p["tokens"].T
+    else:
+        w = head_p["w"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.vocab_padded != cfg.vocab_size:
+        # mask the padded vocab tail so it carries no probability mass
+        valid = jnp.arange(cfg.vocab_padded) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, d_head); positions: (S,) or broadcastable to x[..., :, 0]."""
+    d_head = x.shape[-1]
+    inv = rope_freqs(d_head, theta)                       # (d_head/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = param_dtype(cfg)
+    s_in = 0.02
+    s_out = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], (d, f), s_in, dt),
+            "w_up": _dense_init(ks[1], (d, f), s_in, dt),
+            "w_down": _dense_init(ks[2], (f, d), s_out, dt),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, f), s_in, dt),
+        "w_down": _dense_init(ks[1], (f, d), s_out, dt),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        up = jnp.einsum("...d,df->...f", x, p["w_up"])
+        act = jax.nn.silu(gate) if cfg.mlp_variant == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_up"])
+        if cfg.mlp_variant == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])

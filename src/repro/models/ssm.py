@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) block — chunked training/prefill path
+and single-step recurrent decode.
+
+The chunked algorithm follows arXiv:2405.21060 §6: within-chunk outputs via a
+masked (C Bᵀ ∘ L) "attention-like" term, across-chunk state carried by a
+``lax.scan`` recurrence.  All decay math is done in log space (segment sums)
+for stability.  Pure JAX; the Pallas ``ssd_chunk`` kernel implements the
+within-chunk term for TPU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import param_dtype
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(cfg: ModelConfig, key) -> Params:
+    s = cfg.ssm
+    dt = param_dtype(cfg)
+    d = cfg.d_model
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+
+    def mk(k, shape, scl):
+        return (jax.random.normal(k, shape, jnp.float32) * scl).astype(dt)
+
+    return {
+        "w_in": mk(ks[0], (d, in_dim), 0.02),
+        "conv_w": mk(ks[1], (s.d_conv, conv_ch), 0.2),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        # A_log: A = -exp(A_log), initialized in [1, 16] as in mamba2
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dt),
+        "w_out": mk(ks[2], (d_inner, d), 0.02 / math.sqrt(2.0 * cfg.n_layers)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Projections shared by chunked and decode paths
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    s = cfg.ssm
+    d_inner, n_heads, _ = ssm_dims(cfg)
+    g = s.n_groups
+    z, xBC_dt = jnp.split(proj, [d_inner], axis=-1)
+    xBC, dt_raw = jnp.split(xBC_dt, [d_inner + 2 * g * s.d_state], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _gated_norm(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray):
+    """Mamba-2 gated RMSNorm: norm(x * silu(z)) * scale."""
+    y = x * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B_mat: jnp.ndarray, C_mat: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray | None = None, out_dtype=None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked scan of  h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_tᵀ ;
+    y_t = C_t · h_t.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) (negative);
+    B_mat/C_mat: (B, S, G, N) group-shared.
+    Returns y: (B, S, H, P) fp32 and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_mat.shape[2], B_mat.shape[3]
+    heads_per_g = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, Q, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(B_mat.reshape(Bsz, nc, Q, G, N), 1, 0)
+    Cc = jnp.moveaxis(C_mat.reshape(Bsz, nc, Q, G, N), 1, 0)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(h, inp):
+        """One chunk: intra term + inter term + state update.
+
+        Scanning chunk-by-chunk keeps the (B, Q, Q, H) decay matrix a
+        transient of one chunk rather than materializing all chunks.
+        """
+        xq, dtq, Bq, Cq = inp
+        xq = xq.astype(jnp.float32)
+        dtq = dtq.astype(jnp.float32)
+        Bq = Bq.astype(jnp.float32)
+        Cq = Cq.astype(jnp.float32)
+        la = dtq * Af                                         # (B, Q, H)
+        cs = jnp.cumsum(la, axis=1)
+        # L[i, j] = exp(cs_i - cs_j) for i >= j (decay j+1..i).
+        # Mask BEFORE exp: upper-triangle differences are positive and
+        # exp would overflow -> NaN gradients through the where().
+        Lm = cs[:, :, None, :] - cs[:, None, :, :]            # (B, Q, Q, H)
+        Lm = jnp.exp(jnp.where(tri[None, :, :, None], Lm, -1e30))
+        CB = jnp.einsum("bqgn,bkgn->bqkg", Cq, Bq)            # (B, Q, Q, G)
+        CB = jnp.repeat(CB, heads_per_g, axis=-1)
+        W = CB * Lm * dtq[:, None, :, :]
+        y = jnp.einsum("bqkh,bkhp->bqhp", W, xq)              # intra
+        # inter-chunk: y_i += C_i exp(cs_i) h_prev
+        Ch = jnp.repeat(Cq, heads_per_g, axis=2)              # (B, Q, H, N)
+        y = y + jnp.einsum("bqhn,bhpn,bqh->bqhp", Ch, h, jnp.exp(cs))
+        # state update: h = exp(cs_Q) h + sum_j exp(cs_Q - cs_j) dt_j B_j x_j
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)            # (B, Q, H)
+        Bh = jnp.repeat(Bq, heads_per_g, axis=2)              # (B, Q, H, N)
+        Sc = jnp.einsum("bqh,bqhn,bqhp->bhpn", decay_to_end * dtq, Bh, xq)
+        h_new = h * jnp.exp(cs[:, -1, :])[..., None, None] + Sc
+        return h_new, y.astype(out_dtype or y.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    hT, yc = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y, hT
+
+
+def ssm_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence mamba2 block.  x: (B, S, d_model).
+
+    Returns (out (B,S,d_model), (ssm_state, conv_state)) for decode handoff.
+    """
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    B, S, _ = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # causal depthwise conv over (x, B, C) — bf16 storage, fp32 accum
+    K = s.d_conv
+    w = p["conv_w"].astype(jnp.float32)                        # (K, C)
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S].astype(jnp.float32) * w[i] for i in range(K))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))
+    conv = conv.astype(x.dtype)
+    conv_state = xBC[:, S - (K - 1):] if S >= K - 1 else jnp.pad(
+        xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
+
+    xs, Bm, Cm = jnp.split(
+        conv, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(B, S, n_heads, s.head_dim)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, hT = ssd_chunked(xs, dt, A, Bm, Cm, s.chunk_size, out_dtype=x.dtype)
+    y = (y.astype(jnp.float32)
+         + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None])
+    y = y.reshape(B, S, d_inner)
+    y = _gated_norm(y, z, p["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, (hT, conv_state.astype(x.dtype))
+
+
+def ssm_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               ssm_state: jnp.ndarray, conv_state: jnp.ndarray,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step.  x: (B, 1, d_model).
+
+    ssm_state: (B, H, P, N) fp32; conv_state: (B, K-1, conv_ch).
+    """
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])[:, 0]       # (B, e)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # conv ring update
+    K = s.d_conv
+    hist = jnp.concatenate([conv_state.astype(jnp.float32),
+                            xBC.astype(jnp.float32)[:, None]], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bkc,kc->bc", hist, w) + p["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv)
+    new_conv_state = hist[:, 1:].astype(conv_state.dtype)
+
+    xs, Bm, Cm = jnp.split(
+        conv, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(B, n_heads, s.head_dim)
+    Bm = Bm.reshape(B, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, s.n_groups, s.d_state)
+    heads_per_g = n_heads // s.n_groups
+    Bh = jnp.repeat(Bm, heads_per_g, axis=1)                   # (B,H,N)
+    Ch = jnp.repeat(Cm, heads_per_g, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                    # (B,H)
+    h = (ssm_state * decay[..., None, None]
+         + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, d_inner)
+    y = _gated_norm(y, z, p["norm_scale"]).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None]      # (B,1,d)
+    return out, h, new_conv_state

@@ -1,0 +1,484 @@
+"""Unified transformer covering all assigned families.
+
+One layer-body implementation handles: dense GQA decoders (llama3, qwen,
+minitron, olmo), MoE decoders (grok, deepseek-MLA), pure SSM (mamba2),
+hybrid attn∥SSM (hymba), encoder-decoder (whisper), and VLM prefix models
+(llava).  Layers are stacked on a leading axis and executed with
+``lax.scan`` so the HLO stays O(1) in depth; training wraps the body in
+``jax.checkpoint`` (remat).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.frontend import (apply_frontend, enc_len_for, init_frontend,
+                                   sinusoidal_positions)
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embedding, init_lm_head, init_mlp,
+                                 init_norm, lm_head_logits, param_dtype)
+from repro.models.moe import init_moe, moe_forward
+
+Params = Dict[str, Any]
+
+
+def _constrain(x, mesh, spec: P):
+    """Anchor activation sharding (no-op outside a mesh)."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_decoder_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": init_norm(cfg, ks[0])}
+    if cfg.family != "ssm":
+        p["attn"] = attn.init_attention(cfg, ks[1])
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm(cfg, ks[2])
+    if cfg.family == "encdec":
+        p["norm_x"] = init_norm(cfg, ks[3])
+        p["xattn"] = attn.init_attention(cfg, ks[4])
+    if cfg.family == "moe":
+        p["norm2"] = init_norm(cfg, ks[5])
+        p["moe"] = init_moe(cfg, ks[6])
+    elif cfg.d_ff > 0:
+        p["norm2"] = init_norm(cfg, ks[5])
+        p["mlp"] = init_mlp(cfg, ks[6])
+    return p
+
+
+def _init_encoder_layer(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": init_norm(cfg, ks[0]),
+        "attn": attn.init_attention(cfg, ks[1]),
+        "norm2": init_norm(cfg, ks[2]),
+        "mlp": init_mlp(cfg, ks[3]),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    params: Params = {
+        "embed": init_embedding(cfg, ks[1]),
+        "layers": jax.vmap(lambda k: _init_decoder_layer(cfg, k))(layer_keys),
+        "final_norm": init_norm(cfg, ks[2]),
+        "lm_head": init_lm_head(cfg, ks[3]),
+    }
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks[4], cfg.n_encoder_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_encoder_layer(cfg, k))(enc_keys)
+        params["enc_final_norm"] = init_norm(cfg, ks[5])
+    if cfg.frontend != "none":
+        params["frontend"] = init_frontend(cfg, ks[6])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _decoder_layer_fwd(cfg: ModelConfig, p: Params, x, positions, *,
+                       mesh, data_axes, block_skip: bool,
+                       enc_states=None, want_cache: bool,
+                       moe_fsdp: bool = True):
+    """Returns (x, cache_dict_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    h = apply_norm(cfg, p["norm1"], x)
+
+    if cfg.family == "ssm":
+        out, (hT, conv) = ssm_mod.ssm_forward(cfg, p["ssm"], h)
+        if want_cache:
+            cache["ssm"] = hT
+            cache["conv"] = conv
+    elif cfg.family == "hybrid":
+        a_out, (k, v) = attn.gqa_forward(cfg, p["attn"], h,
+                                         positions=positions,
+                                         block_skip=block_skip,
+                                         mesh=mesh, data_axes=data_axes)
+        s_out, (hT, conv) = ssm_mod.ssm_forward(cfg, p["ssm"], h)
+        out = (a_out + s_out) * 0.5
+        if want_cache:
+            cache["k"], cache["v"] = k, v
+            cache["ssm"], cache["conv"] = hT, conv
+    elif cfg.mla.enabled:
+        out, (ckv, krope) = attn.mla_forward(cfg, p["attn"], h,
+                                             positions=positions,
+                                             block_skip=block_skip)
+        if want_cache:
+            cache["ckv"], cache["krope"] = ckv, krope
+    else:
+        out, (k, v) = attn.gqa_forward(cfg, p["attn"], h,
+                                       positions=positions,
+                                       block_skip=block_skip,
+                                       mesh=mesh, data_axes=data_axes)
+        if want_cache:
+            cache["k"], cache["v"] = k, v
+    x = x + out
+
+    if cfg.family == "encdec":
+        hx = apply_norm(cfg, p["norm_x"], x)
+        xk, xv = attn.cross_kv(cfg, p["xattn"], enc_states)
+        xo, _ = attn.gqa_forward(cfg, p["xattn"], hx, positions=positions,
+                                 causal=False, kv_override=(xk, xv))
+        x = x + xo
+        if want_cache:
+            cache["xk"], cache["xv"] = xk, xv
+
+    if cfg.family == "moe":
+        h2 = apply_norm(cfg, p["norm2"], x)
+        out2, aux = moe_forward(cfg, p["moe"], h2, mesh=mesh,
+                                data_axes=data_axes, fsdp=moe_fsdp)
+        x = x + out2
+    elif cfg.d_ff > 0:
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + apply_mlp(cfg, p["mlp"], h2)
+    return x, (cache if want_cache else None), aux
+
+
+def _encoder_layer_fwd(cfg: ModelConfig, p: Params, x):
+    h = apply_norm(cfg, p["norm1"], x)
+    out, _ = attn.gqa_forward(cfg, p["attn"], h, positions=None, causal=False)
+    x = x + out
+    h2 = apply_norm(cfg, p["norm2"], x)
+    return x + apply_mlp(cfg, p["mlp"], h2)
+
+
+# ---------------------------------------------------------------------------
+# Full-model forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_encoder(cfg: ModelConfig, params: Params, frame_embeds, *, remat,
+                 mesh=None, data_axes=("data",)):
+    x = apply_frontend(cfg, params["frontend"], frame_embeds)
+    pe = sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = x + pe[None]
+    act_spec = P(data_axes, None, None)
+    x = _constrain(x, mesh, act_spec)
+
+    def body(x, layer_p):
+        return _constrain(_encoder_layer_fwd(cfg, layer_p, x), mesh,
+                          act_spec), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch):
+    """Returns (x (B,S,D), positions (S,), labels-aligned-extras)."""
+    if cfg.family == "vlm":
+        tok_emb = embed_tokens(params["embed"], batch["tokens"])
+        patches = apply_frontend(cfg, params["frontend"],
+                                 batch["patch_embeds"]).astype(tok_emb.dtype)
+        x = jnp.concatenate([patches, tok_emb], axis=1)
+    else:
+        x = embed_tokens(params["embed"], batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    return x, positions
+
+
+def _block_size(n_layers: int) -> int:
+    """Largest divisor of n_layers <= sqrt(n_layers) (sqrt-remat blocks)."""
+    import math as _m
+    best = 1
+    for b in range(1, int(_m.isqrt(n_layers)) + 1):
+        if n_layers % b == 0:
+            best = b
+    return best
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, batch, *,
+                   mesh=None, data_axes=("data",), remat: bool = False,
+                   block_skip: bool = False, want_cache: bool = False,
+                   moe_fsdp: bool = True, remat_policy: str = "layer"):
+    """Embed + all decoder layers.  Returns (hidden, cache_stack, aux).
+
+    ``remat_policy='block'`` uses sqrt-remat: an outer scan over layer
+    blocks stores only block-boundary residuals; the inner scan recomputes
+    within a block during backward.  Memory O(sqrt(L)) instead of O(L).
+    """
+    enc_states = None
+    if cfg.family == "encdec":
+        enc_states = _run_encoder(cfg, params, batch["frame_embeds"],
+                                  remat=remat, mesh=mesh,
+                                  data_axes=data_axes)
+    x, positions = _embed_inputs(cfg, params, batch)
+    act_spec = P(data_axes, None, None)
+    x = _constrain(x, mesh, act_spec)
+
+    def body(carry, layer_p):
+        x, aux = carry
+        x, cache, aux_l = _decoder_layer_fwd(
+            cfg, layer_p, x, positions, mesh=mesh, data_axes=data_axes,
+            block_skip=block_skip, enc_states=enc_states,
+            want_cache=want_cache, moe_fsdp=moe_fsdp)
+        x = _constrain(x, mesh, act_spec)
+        return (x, aux + aux_l), cache
+
+    carry0 = (x, jnp.zeros((), jnp.float32))
+    if remat and remat_policy == "block" and not want_cache:
+        bs = _block_size(cfg.n_layers)
+        nb = cfg.n_layers // bs
+        blocked = jax.tree.map(
+            lambda l: l.reshape((nb, bs) + l.shape[1:]), params["layers"])
+
+        def block_body(carry, block_p):
+            inner = jax.checkpoint(body)
+            carry, _ = jax.lax.scan(inner, carry, block_p)
+            return carry, None
+
+        (x, aux), _ = jax.lax.scan(jax.checkpoint(block_body), carry0,
+                                   blocked)
+        caches = None
+    else:
+        if remat:
+            body = jax.checkpoint(body)
+        (x, aux), caches = jax.lax.scan(body, carry0, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, caches, aux, enc_states
+
+
+def chunked_lm_loss(cfg: ModelConfig, params: Params, hidden, labels,
+                    chunk: int = 1024, mesh=None, data_axes=("data",)):
+    """Cross-entropy without materializing full (B,S,V) fp32 logits."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        h, l = xs
+        logits = lm_head_logits(cfg, params["embed"], params.get("lm_head", {}),
+                                h).astype(jnp.float32)
+        logits = _constrain(logits, mesh, P(data_axes, None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (tot + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train_loss(cfg: ModelConfig, params: Params, batch, *,
+                       mesh=None, data_axes=("data",), remat: bool = True,
+                       block_skip: bool = False, remat_policy: str = "layer"):
+    hidden, _, aux, _ = forward_hidden(cfg, params, batch, mesh=mesh,
+                                       data_axes=data_axes, remat=remat,
+                                       block_skip=block_skip,
+                                       want_cache=False,
+                                       remat_policy=remat_policy)
+    if cfg.family == "vlm":
+        # loss on text tokens only; hidden includes the patch prefix
+        n_p = batch["patch_embeds"].shape[1]
+        hidden = hidden[:, n_p:]
+    loss = chunked_lm_loss(cfg, params, hidden, batch["labels"], mesh=mesh,
+                           data_axes=data_axes)
+    return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill
+# ---------------------------------------------------------------------------
+
+def _ring_align(cache_full: jnp.ndarray, S: int, W: int) -> jnp.ndarray:
+    """Take the last W of S prefill K/V rows into ring-buffer slot order."""
+    sl = jax.lax.dynamic_slice_in_dim(cache_full, S - W, W, axis=1)
+    slots = (S - W + jnp.arange(W)) % W
+    out = jnp.zeros_like(sl)
+    return out.at[:, slots].set(sl)
+
+
+def forward_prefill(cfg: ModelConfig, params: Params, batch, *,
+                    mesh=None, data_axes=("data",), block_skip: bool = False,
+                    moe_fsdp: bool = True, quantize_kv_cache: bool = False):
+    """Returns (last-token logits (B, V), decode cache pytree)."""
+    hidden, caches, aux, enc_states = forward_hidden(
+        cfg, params, batch, mesh=mesh, data_axes=data_axes, remat=False,
+        block_skip=block_skip, want_cache=True, moe_fsdp=moe_fsdp)
+    last = hidden[:, -1]
+    logits = lm_head_logits(cfg, params["embed"], params.get("lm_head", {}),
+                            last)
+    S = hidden.shape[1]
+    W = cfg.sliding_window
+    if W and W < S and "k" in caches:
+        caches = dict(caches)
+        caches["k"] = jax.vmap(lambda c: _ring_align(c, S, W))(caches["k"])
+        caches["v"] = jax.vmap(lambda c: _ring_align(c, S, W))(caches["v"])
+    cache = dict(caches)
+    if quantize_kv_cache and "k" in cache:
+        kq, ks = attn.quantize_kv(cache["k"])
+        vq, vs = attn.quantize_kv(cache["v"])
+        cache.update(k=kq, v=vq, k_s=ks, v_s=vs)
+    cache["pos"] = jnp.array(S, jnp.int32)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: decode
+# ---------------------------------------------------------------------------
+
+def kv_cache_bytes(cfg: ModelConfig, batch_size: int, max_seq: int) -> int:
+    """bf16 K/V cache footprint (cluster-total) for auto-quantization."""
+    W = cfg.sliding_window
+    S = min(max_seq, W) if W else max_seq
+    if cfg.attn_free or cfg.mla.enabled:
+        return 0
+    return 2 * cfg.n_layers * batch_size * S * cfg.n_kv_heads \
+        * cfg.d_head * 2
+
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+                      dtype=None, quantize_kv_cache: bool = False) -> Params:
+    """Zero cache sized for ``max_seq`` history (ring-buffered if windowed).
+
+    ``quantize_kv_cache``: int8 K/V with per-(token, head) f32 scales —
+    halves cache HBM and doubles effective decode bandwidth."""
+    dt = dtype or param_dtype(cfg)
+    L = cfg.n_layers
+    cache: Params = {"pos": jnp.array(0, jnp.int32)}
+    W = cfg.sliding_window
+    S = min(max_seq, W) if W else max_seq
+    if cfg.family in ("dense", "moe", "hybrid", "encdec", "vlm"):
+        if cfg.mla.enabled:
+            m = cfg.mla
+            cache["ckv"] = jnp.zeros((L, batch_size, max_seq, m.kv_lora_rank), dt)
+            cache["krope"] = jnp.zeros(
+                (L, batch_size, max_seq, m.qk_rope_head_dim), dt)
+        elif quantize_kv_cache:
+            cache["k"] = jnp.zeros(
+                (L, batch_size, S, cfg.n_kv_heads, cfg.d_head), jnp.int8)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["k_s"] = jnp.zeros((L, batch_size, S), jnp.float32)
+            cache["v_s"] = jnp.zeros_like(cache["k_s"])
+        else:
+            cache["k"] = jnp.zeros(
+                (L, batch_size, S, cfg.n_kv_heads, cfg.d_head), dt)
+            cache["v"] = jnp.zeros_like(cache["k"])
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner, n_heads, conv_ch = ssm_mod.ssm_dims(cfg)
+        cache["ssm"] = jnp.zeros(
+            (L, batch_size, n_heads, cfg.ssm.head_dim, cfg.ssm.d_state),
+            jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (L, batch_size, cfg.ssm.d_conv - 1, conv_ch), dt)
+    if cfg.family == "encdec":
+        enc_len = enc_len_for(cfg, max_seq)
+        cache["xk"] = jnp.zeros(
+            (L, batch_size, enc_len, cfg.n_kv_heads, cfg.d_head), dt)
+        cache["xv"] = jnp.zeros_like(cache["xk"])
+    return cache
+
+
+def _decoder_layer_decode(cfg: ModelConfig, p: Params, x, cache_l, position,
+                          *, mesh, data_axes, moe_fsdp: bool = True,
+                          moe_ep_data: bool = False):
+    new_cache = dict(cache_l)
+    h = apply_norm(cfg, p["norm1"], x)
+
+    if cfg.family == "ssm":
+        out, hT, conv = ssm_mod.ssm_decode(cfg, p["ssm"], h,
+                                           cache_l["ssm"], cache_l["conv"])
+        new_cache["ssm"], new_cache["conv"] = hT, conv
+    elif cfg.family == "hybrid":
+        if "k_s" in cache_l:
+            a_out, ck, cv, ks, vs = attn.gqa_decode(
+                cfg, p["attn"], h, cache_l["k"], cache_l["v"], position,
+                k_scale=cache_l["k_s"], v_scale=cache_l["v_s"])
+            new_cache.update(k_s=ks, v_s=vs)
+        else:
+            a_out, ck, cv = attn.gqa_decode(cfg, p["attn"], h, cache_l["k"],
+                                            cache_l["v"], position)
+        s_out, hT, conv = ssm_mod.ssm_decode(cfg, p["ssm"], h,
+                                             cache_l["ssm"], cache_l["conv"])
+        out = (a_out + s_out) * 0.5
+        new_cache.update(k=ck, v=cv, ssm=hT, conv=conv)
+    elif cfg.mla.enabled:
+        out, ckv, krope = attn.mla_decode(cfg, p["attn"], h[:, 0:1],
+                                          cache_l["ckv"], cache_l["krope"],
+                                          position)
+        new_cache.update(ckv=ckv, krope=krope)
+    else:
+        if "k_s" in cache_l:
+            out, ck, cv, ks, vs = attn.gqa_decode(
+                cfg, p["attn"], h, cache_l["k"], cache_l["v"], position,
+                k_scale=cache_l["k_s"], v_scale=cache_l["v_s"])
+            new_cache.update(k_s=ks, v_s=vs)
+        else:
+            out, ck, cv = attn.gqa_decode(cfg, p["attn"], h, cache_l["k"],
+                                          cache_l["v"], position)
+        new_cache.update(k=ck, v=cv)
+    x = x + out
+
+    if cfg.family == "encdec":
+        hx = apply_norm(cfg, p["norm_x"], x)
+        out_x, _, _ = attn.gqa_decode(
+            cfg, p["xattn"], hx, cache_l["xk"], cache_l["xv"],
+            jnp.array(cache_l["xk"].shape[1] - 1, jnp.int32),
+            update_cache=False)
+        x = x + out_x
+
+    if cfg.family == "moe":
+        h2 = apply_norm(cfg, p["norm2"], x)
+        out2, _ = moe_forward(cfg, p["moe"], h2, mesh=mesh,
+                              data_axes=data_axes, fsdp=moe_fsdp,
+                              ep_data=moe_ep_data)
+        x = x + out2
+    elif cfg.d_ff > 0:
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + apply_mlp(cfg, p["mlp"], h2)
+    return x, new_cache
+
+
+def forward_decode(cfg: ModelConfig, params: Params, tokens, cache, *,
+                   mesh=None, data_axes=("data",), moe_fsdp: bool = True,
+                   moe_ep_data: bool = False):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new cache)."""
+    position = cache["pos"]
+    x = embed_tokens(params["embed"], tokens)
+    x = _constrain(x, mesh, P(data_axes, None, None))
+
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(x, xs):
+        layer_p, cache_l = xs
+        x, new_c = _decoder_layer_decode(cfg, layer_p, x, cache_l, position,
+                                         mesh=mesh, data_axes=data_axes,
+                                         moe_fsdp=moe_fsdp,
+                                         moe_ep_data=moe_ep_data)
+        x = _constrain(x, mesh, P(data_axes, None, None))
+        return x, new_c
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], layer_cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head_logits(cfg, params["embed"], params.get("lm_head", {}),
+                            x[:, 0])
+    new_cache = dict(new_caches)
+    new_cache["pos"] = position + 1
+    return logits, new_cache

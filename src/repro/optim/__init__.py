@@ -1,0 +1,3 @@
+"""Optimizers and gradient transforms."""
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import lr_schedule  # noqa: F401

@@ -1,0 +1,77 @@
+"""AdamW in plain JAX.
+
+Moments are fp32 and sharded exactly like the parameters (ZeRO-style: with
+FSDP specs the optimizer state is fully sharded across the mesh).  Params may
+be bf16; the update math runs in fp32 and casts back.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def adamw_init(params: Any, moment_dtype=jnp.float32) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Any, state: Dict[str, Any], params: Any,
+                 lr: jnp.ndarray, tc: TrainConfig,
+                 ) -> Tuple[Any, Dict[str, Any], jnp.ndarray]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * clip
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps) + tc.weight_decay * p.astype(
+            jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(mdt), v_new.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    # serialize per-leaf updates: without the barrier, XLA may keep the
+    # fp32 (g, m, v) temporaries of EVERY stacked leaf live at once —
+    # several GiB/chip on 100B+ models
+    out = []
+    prev = None
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        if prev is not None:
+            p, g, m, v, *prev = jax.lax.optimization_barrier(
+                (p, g, m, v) + tuple(prev))
+        res = upd(p, g, m, v)
+        out.append(res)
+        prev = list(res)
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, gnorm

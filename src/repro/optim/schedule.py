@@ -1,0 +1,16 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def lr_schedule(step: jnp.ndarray, tc: TrainConfig) -> jnp.ndarray:
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / jnp.maximum(tc.total_steps - tc.warmup_steps, 1), 0, 1)
+    cos = 0.1 + 0.45 * (1 + jnp.cos(jnp.pi * prog))
+    return tc.learning_rate * warm * cos

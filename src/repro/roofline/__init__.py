@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (  # noqa: F401
+    RooflineTerms,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+    model_flops,
+)

@@ -1,0 +1,199 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+  memory term     = HLO_bytes / HBM_bw                 (per chip)
+  collective term = wire_bytes / link_bw               (per chip)
+
+``cost_analysis()`` supplies per-chip FLOPs and bytes (the SPMD module is
+per-device).  Collective bytes are *not* in cost_analysis: we parse the
+post-optimization HLO (``compiled.as_text()``) and convert every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+into wire bytes via the standard ring formulas.  Collectives whose replica
+group crosses the pod boundary are charged at DCN bandwidth.
+
+Caveat recorded in EXPERIMENTS.md: XLA:CPU's `bytes accessed` counts
+operand+output bytes per (fused) op — an upper bound on true HBM traffic;
+relative comparisons between iterations remain meaningful.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                             r"(?:T\(([\d,]+)\))?")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of 'bf16[2,3,4]' or a '(t1, t2)' tuple string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_group(line: str, n_devices: int) -> List[int]:
+    """Device ids of the first replica group on the line."""
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return [int(x) for x in m.group(1).split(",") if x.strip()]
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        base = np.arange(g * s)
+        reshape_dims = [int(x) for x in m.group(3).split(",")]
+        arr = base.reshape(reshape_dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        return list(arr.reshape(g, s)[0])
+    return list(range(n_devices))
+
+
+@dataclass
+class CollectiveStats:
+    kind: str
+    count: int = 0
+    out_bytes: int = 0
+    wire_bytes: float = 0.0          # per-chip, ring-model
+    cross_pod: bool = False
+
+
+def collective_bytes_from_hlo(hlo_text: str, n_devices: int,
+                              pod_size: int = 0,
+                              ) -> Tuple[float, float, Dict[str, dict]]:
+    """Returns (ici_wire_bytes, dcn_wire_bytes, per-kind stats) per chip."""
+    stats: Dict[str, CollectiveStats] = {}
+    ici, dcn = 0.0, 0.0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if m is None:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = shape_bytes(shape_str)
+        group = _first_group(line, n_devices)
+        g = max(len(group), 1)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = nbytes * (g - 1)          # out is the scattered piece
+        elif kind == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:                                 # collective-permute
+            wire = float(nbytes)
+        cross = pod_size > 0 and len({d // pod_size for d in group}) > 1
+        key = kind + ("/dcn" if cross else "")
+        st = stats.setdefault(key, CollectiveStats(kind=key))
+        st.count += 1
+        st.out_bytes += nbytes
+        st.wire_bytes += wire
+        st.cross_pod = cross
+        if cross:
+            dcn += wire
+        else:
+            ici += wire
+    return ici, dcn, {k: asdict(v) for k, v in stats.items()}
+
+
+# ---------------------------------------------------------------------------
+
+def model_flops(param_count: int, active_param_count: int, tokens: int,
+                kind: str) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N·D forward-only."""
+    n = active_param_count
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float                 # per chip
+    hlo_bytes: float                 # per chip
+    ici_bytes: float                 # per chip
+    dcn_bytes: float                 # per chip
+    model_flops_total: float
+    useful_ratio: float              # MODEL_FLOPS / (HLO_FLOPs × chips)
+    dominant: str = ""
+    collectives: Dict[str, dict] = field(default_factory=dict)
+
+    def __post_init__(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization if the step ran at its roofline bound."""
+        t = self.step_time_lower_bound_s
+        if t <= 0:
+            return 0.0
+        per_chip_useful = self.model_flops_total / max(
+            1, self._chips) / t
+        return per_chip_useful / hw.PEAK_BF16_FLOPS
+
+    _chips: int = 1
+
+
+def analyze(flops_per_chip: float, bytes_per_chip: float,
+            ici_bytes: float, dcn_bytes: float, chips: int,
+            model_flops_total: float,
+            collectives: Optional[Dict[str, dict]] = None) -> RooflineTerms:
+    compute_s = flops_per_chip / hw.PEAK_BF16_FLOPS
+    memory_s = bytes_per_chip / hw.HBM_BW
+    collective_s = ici_bytes / hw.ICI_LINK_BW + dcn_bytes / hw.DCN_POD_BW
+    useful = model_flops_total / max(flops_per_chip * chips, 1.0)
+    t = RooflineTerms(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        hlo_flops=flops_per_chip, hlo_bytes=bytes_per_chip,
+        ici_bytes=ici_bytes, dcn_bytes=dcn_bytes,
+        model_flops_total=model_flops_total, useful_ratio=useful,
+        collectives=collectives or {})
+    t._chips = chips
+    return t
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops_total: float,
+                     pod_size: int = 0) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    ici, dcn, stats = collective_bytes_from_hlo(hlo, n_devices, pod_size)
+    return analyze(flops, nbytes, ici, dcn, n_devices, model_flops_total,
+                   stats)

@@ -1,0 +1,12 @@
+"""TPU v5e hardware constants (the TARGET platform; the container is CPU)."""
+
+PEAK_BF16_FLOPS = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link (~ICI); prompt-provided
+DCN_POD_BW = 25e9              # bytes/s cross-pod (assumed half ICI)
+HBM_PER_CHIP = 16 * 2**30      # 16 GiB
+VMEM_PER_CORE = 128 * 2**20    # ~128 MiB VMEM
+
+# L-CSC reference constants, for the paper-reproduction benchmarks
+S9150_PEAK_FP64 = 2.53e12
+S9150_HBM_BW = 320e9

@@ -1,0 +1,6 @@
+"""Training & serving step builders + loops with energy accounting."""
+from repro.runtime.steps import (  # noqa: F401
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+)

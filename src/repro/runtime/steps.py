@@ -1,0 +1,93 @@
+"""Step functions: train (fwd+bwd+AdamW), prefill, decode.
+
+Builders return plain Python callables ready for ``jax.jit``; the launch
+layer attaches in/out shardings and (for the dry-run) lowers them against
+``ShapeDtypeStruct`` inputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MeshConfig, ModelConfig, TrainConfig
+from repro.models import (forward_decode, forward_prefill,
+                          forward_train_loss)
+from repro.optim import adamw_update, lr_schedule
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    mesh=None, mesh_cfg: Optional[MeshConfig] = None,
+                    block_skip: bool = False):
+    data_axes = mesh_cfg.data_axes if mesh_cfg is not None else ("data",)
+    remat = tc.remat != "none"
+    gdt = jnp.dtype(tc.grad_accum_dtype)
+
+    def loss_fn(p, b):
+        loss, metrics = forward_train_loss(
+            cfg, p, b, mesh=mesh, data_axes=data_axes, remat=remat,
+            block_skip=block_skip, remat_policy=tc.remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        M = tc.microbatches
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+
+            def body(carry, b):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(gdt), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda x: x / M, gsum)
+            loss = lsum / M
+            metrics = {"lm_loss": loss,
+                       "aux_loss": jnp.zeros((), jnp.float32)}
+        lr = lr_schedule(opt_state["step"], tc)
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params,
+                                                lr, tc)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None,
+                      mesh_cfg: Optional[MeshConfig] = None,
+                      block_skip: bool = False, moe_fsdp: bool = True,
+                      quantize_kv_cache: bool = False):
+    data_axes = mesh_cfg.data_axes if mesh_cfg is not None else ("data",)
+
+    def prefill_step(params, batch):
+        return forward_prefill(cfg, params, batch, mesh=mesh,
+                               data_axes=data_axes, block_skip=block_skip,
+                               moe_fsdp=moe_fsdp,
+                               quantize_kv_cache=quantize_kv_cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None,
+                     mesh_cfg: Optional[MeshConfig] = None,
+                     moe_fsdp: bool = True, moe_ep_data: bool = False):
+    data_axes = mesh_cfg.data_axes if mesh_cfg is not None else ("data",)
+
+    def decode_step(params, tokens, cache):
+        return forward_decode(cfg, params, tokens, cache, mesh=mesh,
+                              data_axes=data_axes, moe_fsdp=moe_fsdp,
+                              moe_ep_data=moe_ep_data)
+
+    return decode_step

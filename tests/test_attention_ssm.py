@@ -1,0 +1,183 @@
+"""Attention & SSM equivalence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import smoke_config
+from repro.models.attention import (blockwise_attention, gqa_decode,
+                                    mla_decode, mla_forward, quantize_kv,
+                                    dequantize_kv)
+from repro.models.ssm import ssd_chunked
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, dh = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, Sq, KVH, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq=st.sampled_from([16, 48, 64]), h=st.sampled_from([4, 6]),
+       kvh=st.sampled_from([1, 2]), causal=st.booleans())
+def test_blockwise_matches_naive(seq, h, kvh, causal):
+    if h % kvh:
+        h = kvh * (h // kvh)
+    key = jax.random.PRNGKey(seq * h)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, seq, h, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, seq, kvh, 16), jnp.float32)
+    v = jax.random.normal(kv_, (2, seq, kvh, 16), jnp.float32)
+    got = blockwise_attention(q, k, v, causal=causal, q_chunk=16,
+                              kv_chunk=16)
+    want = _naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_block_skip_matches_rectangular():
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(kk, (2, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(kv_, (2, 64, 2, 16), jnp.float32)
+    a = blockwise_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                            block_skip=False)
+    b = blockwise_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                            block_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_sliding_window_mask():
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 64, 4, 16), jnp.float32)
+    k = jax.random.normal(kk, (1, 64, 4, 16), jnp.float32)
+    v = jax.random.normal(kv_, (1, 64, 4, 16), jnp.float32)
+    got = blockwise_attention(q, k, v, causal=True, window=8, q_chunk=16,
+                              kv_chunk=16)
+    want = _naive_attention(q, k, v, causal=True, window=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_full_attention():
+    """Decoding position t equals full attention's row t."""
+    cfg = smoke_config("llama3-8b")
+    from repro.models.attention import init_attention, gqa_forward
+    p = init_attention(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    full, (k, v) = gqa_forward(cfg, p, x, positions=jnp.arange(S))
+    # decode the last position against the cache of the first S-1
+    cache_k = jnp.zeros((B, S, cfg.n_kv_heads, cfg.d_head))
+    cache_v = jnp.zeros_like(cache_k)
+    cache_k = cache_k.at[:, : S - 1].set(k[:, : S - 1])
+    cache_v = cache_v.at[:, : S - 1].set(v[:, : S - 1])
+    out, _, _ = gqa_decode(cfg, p, x[:, S - 1: S], cache_k, cache_v,
+                           jnp.array(S - 1))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, S - 1]), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_mla_decode_absorption_matches_forward():
+    cfg = smoke_config("deepseek-v2-236b")
+    from repro.models.attention import init_attention
+    p = init_attention(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    full, (ckv, krope) = mla_forward(cfg, p, x, positions=jnp.arange(S))
+    cache_ckv = jnp.zeros((B, S, cfg.mla.kv_lora_rank))
+    cache_kr = jnp.zeros((B, S, cfg.mla.qk_rope_head_dim))
+    cache_ckv = cache_ckv.at[:, : S - 1].set(ckv[:, : S - 1])
+    cache_kr = cache_kr.at[:, : S - 1].set(krope[:, : S - 1])
+    out, _, _ = mla_decode(cfg, p, x[:, S - 1: S], cache_ckv, cache_kr,
+                           jnp.array(S - 1))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, S - 1]), rtol=3e-2,
+                               atol=3e-2)
+
+
+def test_int8_kv_cache_quality():
+    """int8 cache decode matches bf16-cache decode closely."""
+    cfg = smoke_config("llama3-8b")
+    from repro.models.attention import init_attention
+    p = init_attention(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    kk, kv_, kx = jax.random.split(jax.random.PRNGKey(1), 3)
+    cache_k = jax.random.normal(kk, (B, S, cfg.n_kv_heads, cfg.d_head))
+    cache_v = jax.random.normal(kv_, (B, S, cfg.n_kv_heads, cfg.d_head))
+    x = jax.random.normal(kx, (B, 1, cfg.d_model), jnp.float32)
+    ref_out, _, _ = gqa_decode(cfg, p, x, cache_k, cache_v,
+                               jnp.array(S - 1))
+    kq, ks = quantize_kv(cache_k)
+    vq, vs = quantize_kv(cache_v)
+    got_out = gqa_decode(cfg, p, x, kq, vq, jnp.array(S - 1),
+                         k_scale=ks, v_scale=vs)[0]
+    a = np.asarray(ref_out).ravel()
+    b = np.asarray(got_out).ravel()
+    cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+    assert cos > 0.99, cos
+
+
+@settings(max_examples=8, deadline=None)
+@given(seq=st.sampled_from([8, 32, 64]), chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_matches_recurrence(seq, chunk):
+    """SSD chunked scan == naive per-step recurrence."""
+    B, H, P, N = 2, 3, 4, 5
+    key = jax.random.PRNGKey(seq * chunk)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, seq, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, seq, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, seq, 1, N), jnp.float32)
+    Cm = jax.random.normal(jax.random.PRNGKey(9), (B, seq, 1, N))
+    y, hT = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+    # naive recurrence
+    h = np.zeros((B, H, P, N), np.float32)
+    ys = np.zeros((B, seq, H, P), np.float32)
+    xn, dtn = np.asarray(x), np.asarray(dt)
+    An, Bn, Cn = np.asarray(A), np.asarray(Bm), np.asarray(Cm)
+    for t in range(seq):
+        decay = np.exp(dtn[:, t] * An)                       # (B, H)
+        outer = np.einsum("bh,bn,bhp->bhpn", dtn[:, t], Bn[:, t, 0],
+                          xn[:, t])
+        h = h * decay[..., None, None] + outer
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cn[:, t, 0], h)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=5e-3, atol=5e-3)
+
+
+def test_ssm_decode_matches_prefill_state():
+    """Prefill final state then one decode step == prefill of S+1 tokens."""
+    cfg = smoke_config("mamba2-370m")
+    from repro.models.ssm import init_ssm, ssm_forward, ssm_decode
+    p = init_ssm(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 17
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S + 1, cfg.d_model),
+                          jnp.float32)
+    full, _ = ssm_forward(cfg, p, x)
+    part, (h, conv) = ssm_forward(cfg, p, x[:, :S])
+    step, _, _ = ssm_decode(cfg, p, x[:, S: S + 1], h, conv)
+    np.testing.assert_allclose(np.asarray(step[:, 0]),
+                               np.asarray(full[:, S]), rtol=2e-2, atol=2e-2)

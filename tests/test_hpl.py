@@ -1,0 +1,58 @@
+"""HPL: blocked LU vs dense solve (property), lookahead equivalence,
+residual acceptance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.hpl import HPLConfig
+from repro.hpl import blocked_lu, linpack_residual, linpack_run, lu_solve
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100), nb=st.sampled_from([16, 32]))
+def test_lu_solve_matches_dense(seed, nb):
+    n = 128
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (n, n), jnp.float32)
+    b = jax.random.normal(kb, (n,), jnp.float32)
+    res = blocked_lu(a, nb)
+    x = lu_solve(res, b, nb)
+    want = jnp.linalg.solve(a, b)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_lookahead_is_equivalent():
+    """Lookahead reorders the trailing update; the factorization is equal."""
+    key = jax.random.PRNGKey(7)
+    a = jax.random.normal(key, (128, 128), jnp.float32)
+    r0 = blocked_lu(a, 32, lookahead=0)
+    r1 = blocked_lu(a, 32, lookahead=1)
+    np.testing.assert_allclose(np.asarray(r0.lu), np.asarray(r1.lu),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(r0.piv), np.asarray(r1.piv))
+
+
+def test_linpack_acceptance():
+    r = linpack_run(HPLConfig(n=192, block=32, dtype="float32"))
+    assert r.passed, f"HPL residual {r.residual}"
+    assert r.gflops > 0
+
+
+def test_linpack_efficiency_mode():
+    base = HPLConfig(n=192, block=64, dtype="float32")
+    eff = base.efficiency()
+    assert eff.block < base.block and eff.mode == "efficiency"
+    r = linpack_run(eff)
+    assert r.passed
+
+
+def test_residual_metric_rejects_garbage():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (64, 64), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (64,), jnp.float32)
+    x_bad = jnp.zeros((64,))
+    assert linpack_residual(a, x_bad, b) > 16.0

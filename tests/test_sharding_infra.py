@@ -1,0 +1,148 @@
+"""Sharding rules, memory planner, checkpointing, data pipeline, analytic
+cost model — pure-CPU infrastructure tests (no multi-device needed: the
+rules operate on MeshConfig, not jax devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from functools import partial
+
+from repro.config import (ARCH_IDS, MULTI_POD_MESH, SHAPES, SINGLE_POD_MESH,
+                          TrainConfig, full_config, shape_applicable,
+                          smoke_config)
+from repro.distributed.sharding import (batch_pspecs, cache_pspecs, fits,
+                                        param_bytes, param_pspecs)
+from repro.launch.specs import decode_input_specs, input_specs
+from repro.models import init_params
+from repro.roofline.analytic import cost_for
+from repro.runtime.memplan import auto_train_plan, estimate_train_bytes
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_cfg", [SINGLE_POD_MESH, MULTI_POD_MESH],
+                         ids=["pod1", "pod2"])
+def test_param_specs_divide(arch, mesh_cfg):
+    """Every parameter's spec must shard evenly on both meshes."""
+    cfg = full_config(arch)
+    sds = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    specs = param_pspecs(cfg, sds, mesh_cfg)
+    leaves = jax.tree.leaves(sds)
+    spec_leaves = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        assert fits(leaf.shape, spec, mesh_cfg), (leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_and_cache_specs_divide(arch, shape_name):
+    cfg = full_config(arch)
+    shape = SHAPES[shape_name]
+    ok, _ = shape_applicable(cfg, shape)
+    if not ok:
+        pytest.skip("assignment skip")
+    for mesh_cfg in (SINGLE_POD_MESH, MULTI_POD_MESH):
+        if shape.kind == "decode":
+            tokens, cache = decode_input_specs(cfg, shape)
+            specs = cache_pspecs(cfg, cache, mesh_cfg)
+            for k, leaf in cache.items():
+                assert fits(leaf.shape, specs[k], mesh_cfg), (k, leaf.shape)
+        else:
+            batch = input_specs(cfg, shape)
+            specs = batch_pspecs(cfg, batch, mesh_cfg)
+            for k, leaf in batch.items():
+                assert fits(leaf.shape, specs[k], mesh_cfg), (k, leaf.shape)
+
+
+def test_serve_mode_strips_fsdp_for_small_models():
+    cfg = full_config("llama3-8b")
+    sds = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    train_specs = jax.tree.leaves(
+        param_pspecs(cfg, sds, SINGLE_POD_MESH, mode="train"),
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    serve_specs = jax.tree.leaves(
+        param_pspecs(cfg, sds, SINGLE_POD_MESH, mode="serve"),
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    t_axes = {a for s in train_specs for a in s if a}
+    s_axes = {a for s in serve_specs for a in s if a}
+    assert "data" in str(t_axes)
+    assert "data" not in str(s_axes)          # TP-only serving
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_memplan_produces_valid_microbatching(arch):
+    cfg = full_config(arch)
+    shape = SHAPES["train_4k"]
+    for mesh_cfg in (SINGLE_POD_MESH, MULTI_POD_MESH):
+        tc = auto_train_plan(cfg, shape, mesh_cfg)
+        assert shape.global_batch % (tc.microbatches * mesh_cfg.data_size) \
+            == 0
+        assert estimate_train_bytes(cfg, shape, mesh_cfg, tc) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_analytic_cost_sane(arch):
+    cfg = full_config(arch)
+    tr = cost_for(cfg, SHAPES["train_4k"], SINGLE_POD_MESH, TrainConfig())
+    de = cost_for(cfg, SHAPES["decode_32k"], SINGLE_POD_MESH)
+    assert tr.flops > 0 and tr.hbm_bytes > 0 and tr.ici_bytes >= 0
+    # training does far more flops per chip than one decode step
+    assert tr.flops > 100 * de.flops
+    # decode is never compute-dominant on these shapes
+    assert de.memory_s + de.collective_s > de.compute_s
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    cfg = smoke_config("olmo-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(0, params, blocking=True)
+    mgr.save(10, params, blocking=True)
+    mgr.save(20, params, blocking=True)
+    assert mgr.latest_step() == 20
+    # keep=2 garbage-collects step 0
+    assert not (tmp_path / "step_00000000").exists()
+    restored = mgr.restore(20, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_ignores_incomplete(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(tmp_path)
+    (tmp_path / "step_00000099").mkdir()       # no manifest -> incomplete
+    assert mgr.latest_step() is None
+
+
+def test_data_pipeline_determinism_and_sharding():
+    from repro.data import SyntheticLMData
+    d0 = SyntheticLMData(1000, 64, 8, seed=3, host_index=0, host_count=2)
+    d0b = SyntheticLMData(1000, 64, 8, seed=3, host_index=0, host_count=2)
+    d1 = SyntheticLMData(1000, 64, 8, seed=3, host_index=1, host_count=2)
+    b0, b0b, b1 = d0.batch(0), d0b.batch(0), d1.batch(0)
+    np.testing.assert_array_equal(b0["tokens"], b0b["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # labels are the shifted stream
+    assert b0["tokens"].shape == (4, 64)
+
+
+def test_grad_compression_error_feedback():
+    from repro.optim.grad_compress import (dequantize_int8, quantize_int8)
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1e-3, (256,)), jnp.float32)
+    q, s = quantize_int8(g)
+    err = g - dequantize_int8(q, s)
+    # error bounded by one quantization step
+    assert float(jnp.max(jnp.abs(err))) <= float(s) * 0.5 + 1e-12
+    # error feedback makes the AVERAGE over steps unbiased: simulate
+    acc = jnp.zeros_like(g)
+    e = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s = quantize_int8(g + e)
+        deq = dequantize_int8(q, s)
+        e = (g + e) - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                               atol=float(s) * 0.2)
