@@ -225,3 +225,52 @@ def dslash_bw() -> List[Row]:
                  f"freq={plan.freq_scale:.2f};loss={plan.perf_loss:.3%}"))
     assert plan.perf_loss <= 0.015                   # paper: <1.5%
     return rows
+
+
+# -- §1: CG energy-to-solution, plain vs even-odd mixed-precision -------------
+
+def cg_energy_to_solution() -> List[Row]:
+    """The solver-level optimization the paper credits for L-CSC's
+    efficiency: even-odd preconditioning + reduced-precision inner CG cut
+    the number (and byte cost) of normal-op applications, so
+    energy-to-solution drops at equal solution quality."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.energy import solver_energy
+    from repro.lqcd import random_su3_field, solve_wilson, solve_wilson_eo
+
+    lat = (8, 8, 8, 8)
+    kappa = 0.12
+    vol = int(np.prod(lat))
+    ku, kr, ki = jax.random.split(jax.random.PRNGKey(0), 3)
+    U = random_su3_field(ku, lat)
+    b = (jax.random.normal(kr, lat + (4, 3))
+         + 1j * jax.random.normal(ki, lat + (4, 3))).astype(jnp.complex64)
+
+    plain = solve_wilson(U, b, kappa, tol=1e-6, max_iters=1000)
+    eo = solve_wilson_eo(U, b, kappa, tol=1e-6, max_iters=1000,
+                         inner_dtype=jnp.bfloat16)
+    assert bool(plain.converged) and eo.converged
+    assert eo.rel_residual <= 1e-6
+    # preconditioning + mixed precision must SAVE normal-op applications
+    assert eo.iters + eo.outer_iters < int(plain.iters)
+
+    e_plain = solver_energy("cg/plain_f32", vol, int(plain.iters),
+                            inner_real_bytes=4, even_odd=False)
+    e_eo = solver_energy("cg/eo_bf16", vol, eo.iters,
+                         outer_ops=eo.outer_iters, inner_real_bytes=2,
+                         outer_real_bytes=4, even_odd=True)
+    assert e_eo.energy_j < e_plain.energy_j          # the paper's point
+
+    rows: List[Row] = []
+    for res, rep in ((plain, e_plain), (eo, e_eo)):
+        rows.append((rep.name, 0.0,
+                     f"normal_ops={rep.normal_ops};"
+                     f"rel_resid={float(res.rel_residual):.1e};"
+                     f"energy_j={rep.energy_j:.3e};"
+                     f"gflops_w={rep.gflops_per_w:.2f}"))
+    rows.append(("cg/eo_vs_plain", 0.0,
+                 f"energy_saving={1 - e_eo.energy_j / e_plain.energy_j:.1%};"
+                 f"op_saving={1 - e_eo.normal_ops / int(plain.iters):.1%};"
+                 f"gflops_w_ratio={e_eo.gflops_per_w / e_plain.gflops_per_w:.2f}"))
+    return rows

@@ -20,6 +20,7 @@ def main() -> None:
         paper_tables.green500_levels,
         paper_tables.result_efficiency,
         paper_tables.dslash_bw,
+        paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,
         kernel_bench.attention_bench,

@@ -4,8 +4,10 @@ Describes the Wilson D-slash / CG configuration and the published cluster
 constants used by the calibrated models and benchmarks.  Not an LM arch —
 not part of ARCH_IDS — but selectable by the LQCD example/benchmarks.
 """
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Tuple
+
+from repro.config import SolverConfig
 
 
 @dataclass(frozen=True)
@@ -16,6 +18,7 @@ class LatticeConfig:
     kappa: float = 0.137
     dtype: str = "float32"
     even_odd: bool = True
+    solver: SolverConfig = field(default_factory=SolverConfig)
 
     @property
     def volume(self) -> int:
@@ -24,6 +27,13 @@ class LatticeConfig:
             v *= s
         return v
 
+
+# Solver presets: the seed's plain full-lattice CGNE, and the paper's
+# CL2QCD strategy (even-odd + reduced-precision inner CG).
+PLAIN_SOLVER = SolverConfig(preconditioner="none", inner_dtype="none")
+EO_SOLVER = SolverConfig(preconditioner="even_odd", inner_dtype="none")
+EO_MIXED_SOLVER = SolverConfig(preconditioner="even_odd",
+                               inner_dtype="bfloat16")
 
 # A thermal (T > 0) lattice: time extent anti-proportional to temperature.
 THERMAL_LATTICE = LatticeConfig(shape=(32, 32, 32, 8))

@@ -20,3 +20,9 @@ from repro.core.energy.green500 import (  # noqa: F401
     linpack_power_trace,
     measure_efficiency,
 )
+from repro.core.energy.solver_energy import (  # noqa: F401
+    S9150_HW,
+    SolverEnergyReport,
+    SolverHW,
+    solver_energy,
+)

@@ -1,0 +1,90 @@
+"""Energy-to-solution model for the CG/D-slash workload (paper §1, §4).
+
+The paper's efficiency story is solver-level: D-slash is memory-bound, so
+time-to-solution is (bytes moved) / (effective bandwidth), and
+energy-to-solution is that time times device power.  Even-odd
+preconditioning and reduced precision both enter through the byte count:
+
+  * one normal-op application (M†M, or the Schur A†A) streams two
+    D-slash-equivalents of traffic regardless of preconditioning — the
+    even-odd win per op is in the *CG vector algebra*, whose vectors are
+    half as long — and preconditioning cuts the number of ops;
+  * reduced inner precision scales every byte of the inner iterations.
+
+``solver_energy`` turns measured iteration counts into the paper-style
+figure of merit (GFLOPS/W) so benchmarks can report plain-vs-even-odd
+deltas with the published S9150 constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.lqcd.dirac import dslash_bytes_per_site, dslash_flops_per_site
+
+# CG linear algebra per normal-op iteration: x/r/p updates and the two
+# reductions touch ~10 spinor-vector streams (24 reals per site each).
+CG_VECTOR_STREAMS = 10
+REALS_PER_SPINOR = 24
+
+
+@dataclass(frozen=True)
+class SolverHW:
+    """Device constants for the bandwidth/power model (default: FirePro
+    S9150, the paper's GPU)."""
+
+    name: str = "S9150"
+    bandwidth_gbs: float = 320.0
+    bw_fraction: float = 0.80          # CL2QCD reaches ~80% of peak
+    power_w: float = 275.0             # board TDP
+
+
+S9150_HW = SolverHW()
+
+
+@dataclass(frozen=True)
+class SolverEnergyReport:
+    name: str
+    normal_ops: int                    # total normal-op applications
+    bytes_total: float
+    time_s: float
+    energy_j: float
+    gflops: float                      # sustained, over the whole solve
+    gflops_per_w: float
+
+
+def normal_op_bytes(volume: int, real_bytes: int, *, even_odd: bool,
+                    compressed_links: bool = True) -> float:
+    """Traffic of one normal-op application plus its CG vector algebra."""
+    # M†M: two full-lattice hops; A†A: four half-lattice hops — same hop
+    # traffic either way (2 x volume sites streamed per application)
+    hop = 2 * volume * dslash_bytes_per_site(real_bytes, compressed_links)
+    sites = volume // 2 if even_odd else volume
+    vecs = CG_VECTOR_STREAMS * sites * REALS_PER_SPINOR * real_bytes
+    return float(hop + vecs)
+
+
+def solver_energy(name: str, volume: int, inner_ops: int, *,
+                  outer_ops: int = 0, inner_real_bytes: int = 4,
+                  outer_real_bytes: int = 4, even_odd: bool = False,
+                  compressed_links: bool = True,
+                  hw: SolverHW = S9150_HW) -> SolverEnergyReport:
+    """Energy-to-solution estimate from iteration counts.
+
+    ``inner_ops`` are normal-op applications at ``inner_real_bytes``
+    precision; ``outer_ops`` are full-precision defect-correction steps
+    (residual recomputation ≈ one Schur application ≈ half a normal op,
+    counted as a full one to stay conservative).
+    """
+    b = (inner_ops * normal_op_bytes(volume, inner_real_bytes,
+                                     even_odd=even_odd,
+                                     compressed_links=compressed_links)
+         + outer_ops * normal_op_bytes(volume, outer_real_bytes,
+                                       even_odd=even_odd,
+                                       compressed_links=compressed_links))
+    eff_bw = hw.bandwidth_gbs * 1e9 * hw.bw_fraction
+    time_s = b / eff_bw
+    energy_j = time_s * hw.power_w
+    flops = (inner_ops + outer_ops) * 2 * volume * dslash_flops_per_site()
+    gflops = flops / time_s / 1e9
+    return SolverEnergyReport(name, inner_ops + outer_ops, b, time_s,
+                              energy_j, gflops, gflops / hw.power_w)

@@ -1,2 +1,5 @@
-from repro.kernels.dslash.ops import dslash_pallas  # noqa: F401
+from repro.kernels.dslash.ops import (  # noqa: F401
+    dslash_half_pallas,
+    dslash_pallas,
+)
 from repro.kernels.dslash.ref import dslash_ref  # noqa: F401

@@ -115,6 +115,105 @@ def _dslash_kernel(psi_ref, psi_next_ref, psi_prev_ref, u_ref, u_prev_ref,
     o_ref[...] = out
 
 
+def _dslash_eo_kernel(out_parity, psi_ref, psi_next_ref, psi_prev_ref,
+                      uout_ref, usrc_ref, usrc_prev_ref, o_ref):
+    """One parity block of D-slash on the compact (checkerboard) layout.
+
+    Input spinors live on the opposite parity of the output; both are
+    half-lattices (X//2 leading axis), so each grid step streams only
+    same-parity blocks through VMEM — half the spinor traffic of the full
+    kernel per output site, which is the CL2QCD bandwidth trick.
+
+    Compact-layout hop rules (derivation in ``repro.lqcd.eo``):
+      y/z hops: in-block rolls;  t hops: rolls with halo slices;
+      x hops:  roll applied only where s = (y+z+t+parity) % 2 == 1.
+    """
+    psi = psi_ref[...]                      # (Xh, Y, Z, Tb, 4, 3, 2)
+    u_out = uout_ref[...]                   # (4, Xh, Y, Z, Tb, 3, 3, 2)
+    u_src = usrc_ref[...]
+    T_AX = 3
+    _, Y, Z, Tb = psi.shape[:4]
+
+    # s_out(y, z, t_global): x offset of the first output-parity site
+    iy = jax.lax.broadcasted_iota(jnp.int32, (Y, Z, Tb), 0)
+    iz = jax.lax.broadcasted_iota(jnp.int32, (Y, Z, Tb), 1)
+    it = jax.lax.broadcasted_iota(jnp.int32, (Y, Z, Tb), 2) \
+        + pl.program_id(0) * Tb
+    s_out = ((iy + iz + it + out_parity) % 2)[..., None, None, None] == 1
+
+    # x hops: output site x = 2i + s_out -> +x neighbour at compact i+s_out,
+    # -x neighbour (and its link) at compact i + s_out - 1
+    psi_f = jnp.where(s_out, jnp.roll(psi, -1, axis=0), psi)
+    psi_b = jnp.where(s_out, psi, jnp.roll(psi, 1, axis=0))
+    u_b = jnp.where(s_out, u_src[0], jnp.roll(u_src[0], 1, axis=0))
+    out = _apply_proj(PM_RE[0], PM_IM[0], _su3_mv(u_out[0], psi_f, False))
+    out = out + _apply_proj(PP_RE[0], PP_IM[0], _su3_mv(u_b, psi_b, True))
+
+    for mu in (1, 2):                       # y, z — in-VMEM rolls
+        psi_f = jnp.roll(psi, -1, axis=mu)
+        psi_b = jnp.roll(psi, 1, axis=mu)
+        u_b = jnp.roll(u_src[mu], 1, axis=mu)
+        out = out + _apply_proj(PM_RE[mu], PM_IM[mu],
+                                _su3_mv(u_out[mu], psi_f, False))
+        out = out + _apply_proj(PP_RE[mu], PP_IM[mu],
+                                _su3_mv(u_b, psi_b, True))
+
+    # t direction — halo blocks from the neighbour T-slices
+    mu = 3
+    psi_f = jnp.concatenate(
+        [jax.lax.slice_in_dim(psi, 1, psi.shape[T_AX], axis=T_AX),
+         psi_next_ref[...]], axis=T_AX)
+    out = out + _apply_proj(PM_RE[mu], PM_IM[mu],
+                            _su3_mv(u_out[mu], psi_f, False))
+    psi_b = jnp.concatenate(
+        [psi_prev_ref[...],
+         jax.lax.slice_in_dim(psi, 0, psi.shape[T_AX] - 1, axis=T_AX)],
+        axis=T_AX)
+    u_b = jnp.concatenate(
+        [usrc_prev_ref[...][mu],
+         jax.lax.slice_in_dim(u_src[mu], 0, u_src[mu].shape[T_AX] - 1,
+                              axis=T_AX)], axis=T_AX)
+    out = out + _apply_proj(PP_RE[mu], PP_IM[mu], _su3_mv(u_b, psi_b, True))
+    o_ref[...] = out
+
+
+def dslash_eo_split(U_out_s: jnp.ndarray, U_src_s: jnp.ndarray,
+                    psi_s: jnp.ndarray, src_parity: int, *,
+                    t_block: int = 4, interpret: bool = False) -> jnp.ndarray:
+    """Half-lattice D-slash hop on re/im-split compact fields.
+
+    U_out_s/U_src_s: (4, X//2, Y, Z, T, 3, 3, 2) f32 packed at the
+    output/source parity; psi_s: (X//2, Y, Z, T, 4, 3, 2) f32 on
+    ``src_parity`` sites.  Returns the opposite-parity half-field.
+    """
+    Xh, Y, Z, T = psi_s.shape[:4]
+    tb = min(t_block, T)
+    assert T % tb == 0
+    n_t = T // tb
+
+    psi_spec = pl.BlockSpec((Xh, Y, Z, tb, 4, 3, 2),
+                            lambda i: (0, 0, 0, i, 0, 0, 0))
+    halo_next = pl.BlockSpec(
+        (Xh, Y, Z, 1, 4, 3, 2),
+        lambda i: (0, 0, 0, (i * tb + tb) % T, 0, 0, 0))
+    halo_prev = pl.BlockSpec(
+        (Xh, Y, Z, 1, 4, 3, 2),
+        lambda i: (0, 0, 0, (i * tb - 1) % T, 0, 0, 0))
+    u_spec = pl.BlockSpec((4, Xh, Y, Z, tb, 3, 3, 2),
+                          lambda i: (0, 0, 0, 0, i, 0, 0, 0))
+    u_prev = pl.BlockSpec((4, Xh, Y, Z, 1, 3, 3, 2),
+                          lambda i: (0, 0, 0, 0, (i * tb - 1) % T, 0, 0, 0))
+
+    return pl.pallas_call(
+        functools.partial(_dslash_eo_kernel, 1 - src_parity),
+        grid=(n_t,),
+        in_specs=[psi_spec, halo_next, halo_prev, u_spec, u_spec, u_prev],
+        out_specs=psi_spec,
+        out_shape=jax.ShapeDtypeStruct(psi_s.shape, psi_s.dtype),
+        interpret=interpret,
+    )(psi_s, psi_s, psi_s, U_out_s, U_src_s, U_src_s)
+
+
 def dslash_split(U_s: jnp.ndarray, psi_s: jnp.ndarray, *, t_block: int = 4,
                  interpret: bool = False) -> jnp.ndarray:
     """D-slash on re/im-split fields.

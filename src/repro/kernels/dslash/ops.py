@@ -6,7 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.dslash.kernel import dslash_split
+from repro.kernels.dslash.kernel import dslash_eo_split, dslash_split
 from repro.kernels.dslash.ref import from_split, to_split
 
 
@@ -18,4 +18,23 @@ def dslash_pallas(U: jnp.ndarray, psi: jnp.ndarray, *, t_block: int = 4,
         interpret = jax.default_backend() != "tpu"
     out_s = dslash_split(to_split(U), to_split(psi), t_block=t_block,
                          interpret=interpret)
+    return from_split(out_s)
+
+
+@partial(jax.jit, static_argnames=("src_parity", "t_block", "interpret"))
+def dslash_half_pallas(U_e: jnp.ndarray, U_o: jnp.ndarray, psi: jnp.ndarray,
+                       src_parity: int, *, t_block: int = 4,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Even-odd hop on complex compact half-fields via the Pallas kernel.
+
+    Same contract as ``repro.lqcd.eo.dslash_half``: ``psi`` lives on
+    ``src_parity`` sites (compact layout), the result on the opposite
+    parity.  ``U_e``/``U_o`` are the packed gauge halves from
+    ``repro.lqcd.eo.pack_gauge``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    U_out, U_src = (U_o, U_e) if src_parity == 0 else (U_e, U_o)
+    out_s = dslash_eo_split(to_split(U_out), to_split(U_src), to_split(psi),
+                            src_parity, t_block=t_block, interpret=interpret)
     return from_split(out_s)

@@ -12,4 +12,16 @@ from repro.lqcd.dirac import (  # noqa: F401
     dslash_flops_per_site,
     dslash_bytes_per_site,
 )
-from repro.lqcd.cg import cg_solve, solve_wilson  # noqa: F401
+from repro.lqcd.cg import (  # noqa: F401
+    cg_solve,
+    solve_dirac,
+    solve_wilson,
+    solve_wilson_eo,
+)
+from repro.lqcd.eo import (  # noqa: F401
+    dslash_half,
+    eo_pack,
+    eo_unpack,
+    pack_gauge,
+    schur_matvec,
+)

@@ -71,3 +71,128 @@ def solve_wilson(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
     true_r = b - wilson_matvec(U, res.x, kappa)
     rel = jnp.sqrt(_dot(true_r, true_r)) / jnp.sqrt(_dot(b, b))
     return CGResult(res.x, res.iters, rel, rel <= tol * 10)
+
+
+# ---------------------------------------------------------------------------
+# Even-odd preconditioned, mixed-precision solver (paper: CL2QCD strategy)
+# ---------------------------------------------------------------------------
+
+class EOCGResult(NamedTuple):
+    """Result of the even-odd / mixed-precision solve.
+
+    ``iters`` counts normal-op (A†A) applications — directly comparable to
+    ``CGResult.iters`` of the unpreconditioned CGNE, since one Schur normal
+    op costs the same D-slash traffic as one full-lattice normal op (two
+    half-lattice hops ≡ one full hop, applied twice)."""
+
+    x: jnp.ndarray
+    iters: int                   # inner normal-op applications (total)
+    outer_iters: int             # defect-correction (reliable-update) steps
+    rel_residual: float          # true ‖b − M x‖ / ‖b‖
+    converged: bool
+
+
+def _round_complex(v: jnp.ndarray, dtype) -> jnp.ndarray:
+    """Round a complex field through a reduced-precision real dtype.
+
+    JAX has no complex bfloat16, so reduced precision is emulated by
+    rounding the re/im planes through ``dtype`` — the storage/traffic model
+    of CL2QCD's low-precision inner solver — while arithmetic stays f32."""
+    if dtype is None:
+        return v
+    if jnp.issubdtype(dtype, jnp.complexfloating):
+        return v.astype(dtype)
+    re = jnp.real(v).astype(dtype).astype(jnp.float32)
+    im = jnp.imag(v).astype(dtype).astype(jnp.float32)
+    return (re + 1j * im).astype(jnp.complex64)
+
+
+def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
+                    tol: float = 1e-6, max_iters: int = 1000,
+                    inner_dtype=None, inner_tol: float = 1e-2,
+                    max_outer: int = 30) -> EOCGResult:
+    """Solve M x = b via the even-odd Schur complement with an (optionally
+    mixed-precision) defect-correction CG.
+
+    The Schur system A x_e = b_e + κ D_eo b_o (A = 1 − κ² D_eo D_oe) is
+    solved by CGNE on the even half-lattice; odd sites are reconstructed
+    exactly as x_o = b_o + κ D_oe x_e, so the full-lattice residual equals
+    the even-system residual.  With ``inner_dtype`` set (e.g.
+    ``jnp.bfloat16``), the inner CG streams fields rounded through that
+    dtype and the outer loop re-computes the residual in f32 and restarts —
+    the reliable-update scheme the paper's single/double CG uses.
+    """
+    from repro.lqcd.eo import (eo_pack, eo_rhs, eo_unpack, pack_gauge,
+                               reconstruct_odd, schur_matvec,
+                               schur_matvec_dagger)
+
+    U_e, U_o = pack_gauge(U)
+    b_e, b_o = eo_pack(b, 0), eo_pack(b, 1)
+    rhs_e = eo_rhs(U_e, U_o, b_e, b_o, kappa)
+    b_norm = float(jnp.sqrt(_dot(b, b)))
+
+    def schur(v):
+        return schur_matvec(U_e, U_o, v, kappa)
+
+    def normal_hi(v):
+        return schur_matvec_dagger(U_e, U_o, schur(v), kappa)
+
+    if inner_dtype is not None:
+        U_e_lo = _round_complex(U_e, inner_dtype)
+        U_o_lo = _round_complex(U_o, inner_dtype)
+
+        def normal_lo(v):
+            v = _round_complex(v, inner_dtype)
+            av = schur_matvec(U_e_lo, U_o_lo, v, kappa)
+            av = _round_complex(av, inner_dtype)
+            out = schur_matvec_dagger(U_e_lo, U_o_lo, av, kappa)
+            return _round_complex(out, inner_dtype)
+    else:
+        normal_lo = normal_hi
+
+    x_e = jnp.zeros_like(rhs_e)
+    r_s = rhs_e                              # Schur-system residual
+    total_inner = 0
+    outer = 0
+    # no low-precision pass gets below its own roundoff; full precision
+    # drives straight to tol in one outer sweep
+    eta = inner_tol if inner_dtype is not None else tol
+    while outer < max_outer and total_inner < max_iters:
+        rel = float(jnp.sqrt(_dot(r_s, r_s))) / max(b_norm, 1e-30)
+        if rel <= tol:
+            break
+        # inner CG on the defect equation A†A e = A† r_s, reduced precision.
+        # Cap each low-precision restart so a stalled inner solve (roundoff
+        # plateau above inner_tol) can't eat the whole budget in one round.
+        remaining = max_iters - total_inner
+        round_cap = (remaining if inner_dtype is None
+                     else min(remaining, max(10, max_iters // 5)))
+        rhs_n = schur_matvec_dagger(U_e, U_o, r_s, kappa)
+        inner = cg_solve(normal_lo, rhs_n, tol=eta, max_iters=round_cap)
+        total_inner += int(inner.iters)
+        x_e = x_e + inner.x
+        r_s = rhs_e - schur(x_e)             # recompute in full precision
+        outer += 1
+
+    x_o = reconstruct_odd(U_e, U_o, x_e, b_o, kappa)
+    x = eo_unpack(x_e, x_o)
+    true_r = b - wilson_matvec(U, x, kappa)
+    rel = float(jnp.sqrt(_dot(true_r, true_r))) / max(b_norm, 1e-30)
+    return EOCGResult(x, total_inner, outer, rel, rel <= tol)
+
+
+def solve_dirac(U: jnp.ndarray, b: jnp.ndarray, kappa: float, cfg):
+    """Config-driven entry point: dispatch on a ``repro.config.SolverConfig``.
+
+    Returns a ``CGResult`` for the plain path and an ``EOCGResult`` for the
+    even-odd paths (both expose ``.x``, ``.iters``, ``.rel_residual``,
+    ``.converged``).
+    """
+    if cfg.preconditioner == "none":
+        return solve_wilson(U, b, kappa, tol=cfg.tol,
+                            max_iters=cfg.max_iters)
+    # float32 inner == working precision: not a mixed-precision solve
+    inner = None if not cfg.mixed_precision else jnp.dtype(cfg.inner_dtype)
+    return solve_wilson_eo(U, b, kappa, tol=cfg.tol,
+                           max_iters=cfg.max_iters, inner_dtype=inner,
+                           inner_tol=cfg.inner_tol, max_outer=cfg.max_outer)

@@ -1,0 +1,98 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The test-suite uses a small slice of the hypothesis API (``given``,
+``settings``, ``strategies.integers/floats/sampled_from/booleans``).  When
+the real package is available the tests import it directly; otherwise they
+fall back to this shim, which runs each property test over a fixed,
+evenly-spaced grid of ``max_examples`` examples instead of randomized ones.
+Collection therefore never fails on the missing dependency, and the
+properties still get exercised on a representative sample.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Sequence
+
+
+class _Strategy:
+    """A deterministic example generator."""
+
+    def __init__(self, fn: Callable[[int, int, int], Any]):
+        self._fn = fn
+
+    def example_at(self, i: int, n: int, salt: int) -> Any:
+        return self._fn(i, n, salt)
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    def gen(i, n, salt):
+        if n <= 1:
+            return lo
+        idx = (i + salt) % n              # rotate per-parameter
+        return lo + round(idx * (hi - lo) / (n - 1))
+    return _Strategy(gen)
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    def gen(i, n, salt):
+        if n <= 1:
+            return lo
+        frac = i / (n - 1)
+        if salt % 2:                      # decorrelate from other params
+            frac = 1.0 - frac
+        return lo + frac * (hi - lo)
+    return _Strategy(gen)
+
+
+def _sampled_from(seq: Sequence[Any]) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda i, n, salt: items[(i + salt) % len(items)])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda i, n, salt: bool((i + salt) % 2))
+
+
+class _Strategies:
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+    sampled_from = staticmethod(_sampled_from)
+    booleans = staticmethod(_booleans)
+
+
+strategies = _Strategies()
+
+
+def given(**strats: _Strategy):
+    """Run the wrapped test once per grid point (``max_examples`` points)."""
+
+    def deco(fn):
+        names = sorted(strats)
+
+        def wrapper():
+            # @settings may sit above @given (tagging the wrapper) or below
+            # it (tagging the raw test fn) — honour both orderings
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 10))
+            for i in range(n):
+                kwargs = {k: strats[k].example_at(i, n, j)
+                          for j, k in enumerate(names)}
+                fn(**kwargs)
+
+        # NOTE: no functools.wraps — pytest must see a zero-arg signature,
+        # not the example parameters (it would look for fixtures for them).
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def settings(*, max_examples: int = 10, **_ignored):
+    """Record ``max_examples`` on the ``given`` wrapper; other hypothesis
+    settings (deadline, ...) have no meaning for the grid runner."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:               # deterministic grid fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.config import smoke_config
 from repro.models.attention import (blockwise_attention, gqa_decode,

@@ -2,7 +2,10 @@
 properties, DVFS planner behaviour, Green500 methodology."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:               # deterministic grid fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.config import EnergyConfig
 from repro.configs import lcsc_lqcd as paper
