@@ -1,18 +1,26 @@
 """Benchmark harness: one function per paper table/figure + kernel benches.
 
-Prints ``name,us_per_call,derived`` CSV and fails if any published-number
-reproduction is out of tolerance.
+Prints ``name,us_per_call,derived`` CSV on stdout.  Failures are
+reported to **stderr** as they happen — a traceback followed by a
+machine-readable ``FAILED:<bench_name>:<error>`` line — and the process
+exits non-zero, so CI can gate on ``FAILED:`` without parsing the CSV
+(stdout stays clean CSV either way).
+
+Usage::
+
+    python -m benchmarks.run [--only SUBSTR]
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def benches():
     from benchmarks import kernel_bench, paper_tables
 
-    benches = [
+    return [
         paper_tables.table1_nodes,
         paper_tables.fig1a_perf_vs_voltage,
         paper_tables.fig1b_power,
@@ -20,22 +28,42 @@ def main() -> None:
         paper_tables.green500_levels,
         paper_tables.result_efficiency,
         paper_tables.dslash_bw,
+        paper_tables.autotune_operating_point,
         paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,
         kernel_bench.attention_bench,
     ]
-    print("name,us_per_call,derived")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help="run only benches whose name contains SUBSTR")
+    args = ap.parse_args(argv)
+
+    selected = [b for b in benches() if args.only in b.__name__]
+    if not selected:
+        print(f"FAILED:run:no bench matches {args.only!r}", file=sys.stderr)
+        raise SystemExit(2)
+
+    print("name,us_per_call,derived", flush=True)
     failed = []
-    for bench in benches:
+    for bench in selected:
         try:
-            for name, us, derived in bench():
-                print(f"{name},{us:.1f},{derived}")
-        except Exception as e:  # noqa: BLE001
-            failed.append((bench.__name__, e))
+            rows = bench()
+        except Exception as e:  # noqa: BLE001 — report and keep going
+            failed.append(bench.__name__)
             traceback.print_exc()
+            msg = str(e).split("\n")[0][:200]
+            print(f"FAILED:{bench.__name__}:{msg}", file=sys.stderr,
+                  flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
     if failed:
-        print(f"FAILED: {[n for n, _ in failed]}", file=sys.stderr)
+        print(f"FAILED:summary:{len(failed)} benches failed "
+              f"({' '.join(failed)})", file=sys.stderr, flush=True)
         raise SystemExit(1)
     print("# all paper-claim reproductions within tolerance")
 

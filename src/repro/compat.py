@@ -1,0 +1,48 @@
+"""Version bridges for jax APIs that moved between releases.
+
+``jax.shard_map`` only exists as a top-level API in newer jax; older
+releases (e.g. the 0.4.x line in CI images) ship it as
+``jax.experimental.shard_map.shard_map`` with ``check_rep`` instead of
+``check_vma`` and ``auto`` (the complement) instead of ``axis_names``.
+All repo code goes through this wrapper so the multi-device paths run
+on either line.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+
+def axis_size(axis_name: str) -> int:
+    """Concrete size of a mapped axis inside a ``shard_map`` body.
+
+    ``jax.lax.axis_size`` is new-API; on the 0.4.x line the axis
+    environment tracks sizes as plain ints (``jax.core.axis_frame``)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return int(frame) if isinstance(frame, int) else int(frame.size)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None,
+              axis_names: Optional[Set[str]] = None):
+    """Top-level ``jax.shard_map`` when available, else the experimental
+    one with the old keyword spellings."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration

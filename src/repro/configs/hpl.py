@@ -23,6 +23,17 @@ class HPLConfig:
                          lookahead=self.lookahead, mode="efficiency",
                          dtype=self.dtype, seed=self.seed)
 
+    def tuned(self) -> "HPLConfig":
+        """Blocking/lookahead from the autotune cache for this problem
+        size (``repro.autotune``; the analytic searcher runs once on a
+        cache miss) — replaces the hard-coded block constants."""
+        from repro.autotune import tuned_config
+        best = tuned_config("hpl", (self.n,))
+        return HPLConfig(n=self.n, block=int(best["block"]),
+                         lookahead=int(best["lookahead"]),
+                         mode=self.mode, dtype=self.dtype,
+                         seed=self.seed)
+
 
 SMOKE_HPL = HPLConfig(n=192, block=32)
 DEFAULT_HPL = HPLConfig()

@@ -12,14 +12,13 @@ step; ``heuristic_search`` reproduces the paper's parameter-space search
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import numpy as np
 
 from repro.config import EnergyConfig
-from repro.core.energy.power_model import (fan_power, tpu_chip_power)
+from repro.core.energy.power_model import tpu_chip_power
 from repro.core.energy.throttle import tpu_sustained_scale
 
 

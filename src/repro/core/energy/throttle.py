@@ -13,8 +13,8 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
-from repro.core.energy.power_model import (K_DYN, S9150, STOCK_MHZ,
-                                           gpu_static_power, voltage_at)
+from repro.core.energy.power_model import (K_DYN, S9150, gpu_static_power,
+                                           voltage_at)
 
 # Oscillating between P-states loses pipeline efficiency vs constant clock
 OSC_PENALTY = 0.08
@@ -68,9 +68,14 @@ def dgemm_perf_gflops(f_set_mhz: float, vid_900: float, *,
 
 
 def hpl_node_perf(f_set_mhz: float, vids: Sequence[float], *,
-                  temp_c: float = 55.0) -> float:
+                  temp_c: float = 55.0,
+                  util: float = HPL_GPU_UTIL) -> float:
     """Node HPL GFLOPS.  Multi-node HPL is gated by the slowest node, so
     cluster perf = n_nodes * min(node perf) (paper §2).
+
+    ``util`` is the sustained GPU duty cycle (blocking-dependent — the
+    autotuner's analytic model varies it with HPL's NB; the default is
+    the calibrated Green500-run value).
 
     No oscillation penalty: HPL's phase structure (panel factorization /
     update bursts) absorbs the P-state dithering that hurts the
@@ -78,7 +83,7 @@ def hpl_node_perf(f_set_mhz: float, vids: Sequence[float], *,
     gpu = 0.0
     for v in vids:
         f_sus, _ = sustained_frequency(f_set_mhz, v, temp_c=temp_c,
-                                       util=HPL_GPU_UTIL)
+                                       util=util)
         gpu += S9150.peak_fp64_gflops(f_sus / 1000.0) * DGEMM_EFF
     return gpu * HPL_NODE_SCALE
 

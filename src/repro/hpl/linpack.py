@@ -13,7 +13,6 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import EnergyConfig
 from repro.configs.hpl import HPLConfig
@@ -46,7 +45,15 @@ def linpack_residual(a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray) -> float:
 
 
 def linpack_run(cfg: HPLConfig, *, energy: Optional[EnergyConfig] = None,
-                ) -> LinpackResult:
+                tuned: bool = False) -> LinpackResult:
+    """Factor + solve + HPL residual + (optional) energy plan.
+
+    ``tuned=True`` swaps ``cfg``'s blocking for the autotune-cache
+    winner at this problem size (see ``HPLConfig.tuned``) before
+    running — the efficiency-mode replacement for the hard-coded block
+    constants."""
+    if tuned:
+        cfg = cfg.tuned()
     key = jax.random.PRNGKey(cfg.seed)
     ka, kb = jax.random.split(key)
     dt = jnp.dtype(cfg.dtype)

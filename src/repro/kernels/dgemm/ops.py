@@ -2,6 +2,11 @@
 
 ``interpret=None`` auto-selects: compiled on TPU, interpret mode on CPU
 (the container validates kernels in interpret mode; TPU is the target).
+
+``tuned=True`` replaces the hard-coded 256³ tile default with the
+autotuner's winner for this (m, k, n) and backend, resolved through the
+JSON cache (``repro.autotune``) — a cache miss runs the analytic
+roofline+power tuner once and memoizes.
 """
 from __future__ import annotations
 
@@ -12,14 +17,35 @@ import jax.numpy as jnp
 
 from repro.kernels.dgemm.kernel import matmul_pallas
 
+DEFAULT_TILE = 256
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def dgemm(x: jnp.ndarray, y: jnp.ndarray, *, bm: int = 256, bn: int = 256,
-          bk: int = 256, interpret: bool | None = None) -> jnp.ndarray:
+def _dgemm_call(x: jnp.ndarray, y: jnp.ndarray, *, bm: int, bn: int,
+                bk: int, interpret: bool) -> jnp.ndarray:
+    return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def dgemm(x: jnp.ndarray, y: jnp.ndarray, *, bm: int | None = None,
+          bn: int | None = None, bk: int | None = None,
+          tuned: bool = False,
+          interpret: bool | None = None) -> jnp.ndarray:
+    """Tiled matmul.  Tile resolution order: explicit ``bm/bn/bk``
+    arguments, then (``tuned=True``) the autotune cache, then the
+    static default."""
     if interpret is None:
         interpret = not _on_tpu()
-    return matmul_pallas(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if tuned and (bm is None or bn is None or bk is None):
+        from repro.autotune import tuned_config
+        cfg = tuned_config("dgemm", (x.shape[0], x.shape[1], y.shape[1]))
+        bm = bm if bm is not None else cfg["bm"]
+        bn = bn if bn is not None else cfg["bn"]
+        bk = bk if bk is not None else cfg["bk"]
+    bm = DEFAULT_TILE if bm is None else bm
+    bn = DEFAULT_TILE if bn is None else bn
+    bk = DEFAULT_TILE if bk is None else bk
+    return _dgemm_call(x, y, bm=bm, bn=bn, bk=bk, interpret=interpret)

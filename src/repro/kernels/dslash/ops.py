@@ -1,4 +1,10 @@
-"""Public jit'd wrapper: complex-field D-slash backed by the Pallas kernel."""
+"""Public jit'd wrappers: complex-field D-slash backed by the Pallas
+kernels.
+
+``tuned=True`` resolves ``t_block`` from the autotune cache for this
+lattice and backend (``repro.autotune``; analytic roofline tuner on a
+cache miss) instead of the static default of 4.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,21 +15,51 @@ import jax.numpy as jnp
 from repro.kernels.dslash.kernel import dslash_eo_split, dslash_split
 from repro.kernels.dslash.ref import from_split, to_split
 
+DEFAULT_T_BLOCK = 4
+
+
+def _resolve_t_block(t_block: int | None, tuned: bool,
+                     lat: tuple) -> int:
+    if t_block is not None:
+        return t_block
+    if tuned:
+        from repro.autotune import tuned_config
+        return int(tuned_config("dslash", lat)["t_block"])
+    return DEFAULT_T_BLOCK
+
 
 @partial(jax.jit, static_argnames=("t_block", "interpret"))
-def dslash_pallas(U: jnp.ndarray, psi: jnp.ndarray, *, t_block: int = 4,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """Complex-in/complex-out D-slash via the split-field Pallas kernel."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _dslash_call(U: jnp.ndarray, psi: jnp.ndarray, *, t_block: int,
+                 interpret: bool) -> jnp.ndarray:
     out_s = dslash_split(to_split(U), to_split(psi), t_block=t_block,
                          interpret=interpret)
     return from_split(out_s)
 
 
+def dslash_pallas(U: jnp.ndarray, psi: jnp.ndarray, *,
+                  t_block: int | None = None, tuned: bool = False,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Complex-in/complex-out D-slash via the split-field Pallas kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    # gauge layout is (4, X, Y, Z, T, 3, 3): direction axis leads
+    t_block = _resolve_t_block(t_block, tuned, tuple(U.shape[1:5]))
+    return _dslash_call(U, psi, t_block=t_block, interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("src_parity", "t_block", "interpret"))
+def _dslash_half_call(U_e: jnp.ndarray, U_o: jnp.ndarray, psi: jnp.ndarray,
+                      src_parity: int, *, t_block: int,
+                      interpret: bool) -> jnp.ndarray:
+    U_out, U_src = (U_o, U_e) if src_parity == 0 else (U_e, U_o)
+    out_s = dslash_eo_split(to_split(U_out), to_split(U_src), to_split(psi),
+                            src_parity, t_block=t_block, interpret=interpret)
+    return from_split(out_s)
+
+
 def dslash_half_pallas(U_e: jnp.ndarray, U_o: jnp.ndarray, psi: jnp.ndarray,
-                       src_parity: int, *, t_block: int = 4,
+                       src_parity: int, *, t_block: int | None = None,
+                       tuned: bool = False,
                        interpret: bool | None = None) -> jnp.ndarray:
     """Even-odd hop on complex compact half-fields via the Pallas kernel.
 
@@ -34,7 +70,7 @@ def dslash_half_pallas(U_e: jnp.ndarray, U_o: jnp.ndarray, psi: jnp.ndarray,
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    U_out, U_src = (U_o, U_e) if src_parity == 0 else (U_e, U_o)
-    out_s = dslash_eo_split(to_split(U_out), to_split(U_src), to_split(psi),
-                            src_parity, t_block=t_block, interpret=interpret)
-    return from_split(out_s)
+    # the packed half-lattice keeps the full T extent (X is halved)
+    t_block = _resolve_t_block(t_block, tuned, tuple(U_e.shape[1:5]))
+    return _dslash_half_call(U_e, U_o, psi, src_parity, t_block=t_block,
+                             interpret=interpret)

@@ -9,7 +9,6 @@ arithmetic of `repro.models.ssm.ssd_chunked`'s chunk_step, fused.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

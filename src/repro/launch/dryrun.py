@@ -26,15 +26,14 @@ from pathlib import Path
 import jax
 
 from repro.config import (ARCH_IDS, SHAPES, MeshConfig, ModelConfig,
-                          ShapeConfig, TrainConfig, full_config,
-                          shape_applicable)
+                          ShapeConfig, full_config, shape_applicable)
 from repro.distributed.sharding import (batch_pspecs, cache_pspecs,
                                         named_shardings, param_bytes,
                                         param_pspecs)
 from repro.launch.mesh import make_production_mesh, mesh_config
 from repro.launch.specs import (decode_input_specs, input_specs,
                                 should_quantize_kv)
-from repro.models import init_decode_cache, init_params
+from repro.models import init_params
 from repro.optim import adamw_init
 from repro.roofline import analyze_compiled, model_flops
 from repro.roofline import hw

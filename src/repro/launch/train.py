@@ -10,17 +10,15 @@ code path on a real mesh.
 from __future__ import annotations
 
 import argparse
-import math
 import time
-from dataclasses import replace
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.config import (ARCH_IDS, SHAPES, EnergyConfig, ShapeConfig,
-                          TrainConfig, get_arch)
+from repro.config import (ARCH_IDS, EnergyConfig, ShapeConfig, TrainConfig,
+                          get_arch)
 from repro.core.energy.dvfs import plan_frequency
 from repro.data import make_batch_iterator
 from repro.distributed.fault import FaultPolicy, FaultTolerantLoop

@@ -8,8 +8,7 @@ CGNE on the normal equations M†M x = M† b (M is not hermitian), with the
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ re-derives that in benchmarks/dslash_bw.py).
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +16,8 @@ from repro.lqcd.dirac import EYE4, GAMMA
 
 def _halo_exchange(x: jnp.ndarray, axis_name: str, t_axis: int):
     """Returns (from_next_first_slice, from_prev_last_slice)."""
-    n = jax.lax.axis_size(axis_name)
-    idx = jnp.arange(n)
+    from repro.compat import axis_size
+    n = axis_size(axis_name)
     fwd_perm = [(int(i), int((i - 1) % n)) for i in range(n)]   # to prev
     bwd_perm = [(int(i), int((i + 1) % n)) for i in range(n)]   # to next
     first = jax.lax.slice_in_dim(x, 0, 1, axis=t_axis)
@@ -74,7 +73,8 @@ def dslash_sharded(U: jnp.ndarray, psi: jnp.ndarray, mesh,
     """D-slash with the lattice T axis sharded over ``axis_name``."""
     u_spec = P(None, None, None, None, axis_name, None, None)
     psi_spec = P(None, None, None, axis_name, None, None)
-    return jax.shard_map(
+    from repro.compat import shard_map
+    return shard_map(
         partial(_dslash_local, axis_name=axis_name),
         mesh=mesh, in_specs=(u_spec, psi_spec), out_specs=psi_spec,
         check_vma=False)(U, psi)

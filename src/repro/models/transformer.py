@@ -9,7 +9,7 @@ hybrid attn∥SSM (hymba), encoder-decoder (whisper), and VLM prefix models
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

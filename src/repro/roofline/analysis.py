@@ -17,7 +17,6 @@ relative comparisons between iterations remain meaningful.
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import asdict, dataclass, field
 from typing import Dict, List, Optional, Tuple

@@ -6,8 +6,7 @@ layer attaches in/out shardings and (for the dry-run) lowers them against
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ properties still get exercised on a representative sample.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, Sequence
 
 
 class _Strategy:

@@ -7,6 +7,23 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
-# smoke tests and benches must see 1 device (the dry-run alone uses 512,
-# in its own process)
+# CPU backend (never probe for accelerators — the TPU plugin's metadata
+# lookup hangs on hosts without one), with 8 virtual host devices so the
+# multi-device sharding tests run in-process.  Must happen before jax
+# initializes a backend; conftest imports first, so it does.  The
+# dry-run subprocess test overrides with its own 512-device flag.
+flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        flags + " --xla_force_host_platform_device_count=8").strip()
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def need_devices(n: int) -> None:
+    """Skip (don't fail) a multi-device test when the virtual-device
+    flag above was overridden away and fewer than ``n`` are visible."""
+    import jax
+    import pytest
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={n}")

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ModuleNotFoundError:               # deterministic grid fallback
@@ -10,8 +9,7 @@ except ModuleNotFoundError:               # deterministic grid fallback
 
 from repro.config import smoke_config
 from repro.models.attention import (blockwise_attention, gqa_decode,
-                                    mla_decode, mla_forward, quantize_kv,
-                                    dequantize_kv)
+                                    mla_decode, mla_forward, quantize_kv)
 from repro.models.ssm import ssd_chunked
 
 

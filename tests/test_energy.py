@@ -13,12 +13,9 @@ from repro.core.energy import (dgemm_perf_gflops, fan_power, hpl_node_perf,
                                level1_exploit, linpack_power_trace,
                                measure_efficiency, node_power,
                                plan_frequency, sustained_frequency)
-from repro.core.energy.green500 import (extrapolation_error,
-                                        node_efficiencies,
-                                        select_median_nodes)
-from repro.core.energy.power_model import V_MAX, V_MIN, sample_vids
-from repro.core.energy.throttle import (HPL_GPU_UTIL, cluster_hpl_perf,
-                                        gpu_power_throttled)
+from repro.core.energy.green500 import extrapolation_error, node_efficiencies
+from repro.core.energy.power_model import V_MAX, V_MIN
+from repro.core.energy.throttle import HPL_GPU_UTIL, gpu_power_throttled
 from repro.core.energy.scheduler import (Chip, Job, drop_slowest_pod,
                                          expected_slowdown,
                                          frequency_floor_mitigation,

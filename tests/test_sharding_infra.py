@@ -11,7 +11,7 @@ from repro.config import (ARCH_IDS, MULTI_POD_MESH, SHAPES, SINGLE_POD_MESH,
                           TrainConfig, full_config, shape_applicable,
                           smoke_config)
 from repro.distributed.sharding import (batch_pspecs, cache_pspecs, fits,
-                                        param_bytes, param_pspecs)
+                                        param_pspecs)
 from repro.launch.specs import decode_input_specs, input_specs
 from repro.models import init_params
 from repro.roofline.analytic import cost_for

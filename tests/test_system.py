@@ -3,8 +3,8 @@ MoE routing behaves, Green500 trace accounting is self-consistent."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from conftest import need_devices
 from repro.config import ShapeConfig, TrainConfig, smoke_config
 from repro.data import make_batch_iterator
 from repro.models import init_params
@@ -88,77 +88,46 @@ def test_moe_routing_mass_conservation():
 
 
 def test_moe_sharded_matches_local():
-    """shard_map MoE == single-shard fallback (subprocess, 4 devices)."""
-    import subprocess, sys, os
-    code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp, numpy as np
-from repro.config import smoke_config, MoEConfig
-from dataclasses import replace
-from repro.models.moe import init_moe, moe_forward
-cfg = smoke_config('grok-1-314b')
-cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))  # no drops
-p = init_moe(cfg, jax.random.PRNGKey(0))
-x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model), jnp.float32)
-local, aux_l = moe_forward(cfg, p, x, mesh=None)
-mesh = jax.make_mesh((2, 2), ("data", "model"))
-shard, aux_s = moe_forward(cfg, p, x, mesh=mesh)
-np.testing.assert_allclose(np.asarray(local), np.asarray(shard),
-                           rtol=3e-2, atol=3e-2)
-print("MOE_OK")
-"""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(
-        __import__("pathlib").Path(__file__).resolve().parents[1] / "src")
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=300)
-    assert "MOE_OK" in r.stdout, r.stderr[-2000:]
+    """shard_map MoE == single-shard fallback (2x2 CPU device mesh)."""
+    from dataclasses import replace
+    from repro.models.moe import init_moe, moe_forward
+    need_devices(4)
+    cfg = smoke_config("grok-1-314b")
+    cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))  # no drops
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model),
+                          jnp.float32)
+    local, aux_l = moe_forward(cfg, p, x, mesh=None)
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    shard, aux_s = moe_forward(cfg, p, x, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(local), np.asarray(shard),
+                               rtol=3e-2, atol=3e-2)
 
 
 def test_train_step_small_mesh():
-    """Full sharded train step on a 2x2 host-device mesh (subprocess)."""
-    import subprocess, sys, os
-    code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-import jax, jax.numpy as jnp, numpy as np
-from functools import partial
-from repro.config import smoke_config, ShapeConfig, TrainConfig, MeshConfig
-from repro.models import init_params
-from repro.optim import adamw_init
-from repro.runtime.steps import make_train_step
-from repro.distributed.sharding import param_pspecs, batch_pspecs, named_shardings
-from jax.sharding import PartitionSpec as P
-
-cfg = smoke_config('grok-1-314b')
-mesh_cfg = MeshConfig((2, 2), ("data", "model"))
-mesh = jax.make_mesh((2, 2), ("data", "model"))
-shape = ShapeConfig("t", 32, 4, "train")
-params = init_params(cfg, jax.random.PRNGKey(0))
-opt = adamw_init(params)
-batch = {"tokens": jnp.zeros((4, 32), jnp.int32),
-         "labels": jnp.zeros((4, 32), jnp.int32)}
-pspecs = param_pspecs(cfg, params, mesh_cfg)
-pshard = named_shardings(mesh, pspecs)
-oshard = named_shardings(mesh, {"m": pspecs, "v": pspecs, "step": P()})
-bshard = named_shardings(mesh, batch_pspecs(cfg, batch, mesh_cfg))
-params = jax.device_put(params, pshard)
-opt = jax.device_put(opt, oshard)
-batch = jax.device_put(batch, bshard)
-tc = TrainConfig(remat="block", microbatches=2)
-step = jax.jit(make_train_step(cfg, tc, mesh=mesh, mesh_cfg=mesh_cfg),
-               in_shardings=(pshard, oshard, bshard),
-               out_shardings=(pshard, oshard, None))
-params, opt, m = step(params, opt, batch)
-assert np.isfinite(float(m["loss"]))
-print("MESH_TRAIN_OK", float(m["loss"]))
-"""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(
-        __import__("pathlib").Path(__file__).resolve().parents[1] / "src")
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env=env, timeout=600)
-    assert "MESH_TRAIN_OK" in r.stdout, r.stderr[-2000:]
+    """Full sharded train step on a 2x2 CPU device mesh."""
+    from jax.sharding import PartitionSpec as P
+    from repro.config import MeshConfig
+    from repro.distributed.sharding import (batch_pspecs, named_shardings,
+                                            param_pspecs)
+    need_devices(4)
+    cfg = smoke_config("grok-1-314b")
+    mesh_cfg = MeshConfig((2, 2), ("data", "model"))
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    batch = {"tokens": jnp.zeros((4, 32), jnp.int32),
+             "labels": jnp.zeros((4, 32), jnp.int32)}
+    pspecs = param_pspecs(cfg, params, mesh_cfg)
+    pshard = named_shardings(mesh, pspecs)
+    oshard = named_shardings(mesh, {"m": pspecs, "v": pspecs, "step": P()})
+    bshard = named_shardings(mesh, batch_pspecs(cfg, batch, mesh_cfg))
+    params = jax.device_put(params, pshard)
+    opt = jax.device_put(opt, oshard)
+    batch = jax.device_put(batch, bshard)
+    tc = TrainConfig(remat="block", microbatches=2)
+    step = jax.jit(make_train_step(cfg, tc, mesh=mesh, mesh_cfg=mesh_cfg),
+                   in_shardings=(pshard, oshard, bshard),
+                   out_shardings=(pshard, oshard, None))
+    params, opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
