@@ -147,6 +147,64 @@ def green500_levels() -> List[Row]:
     return rows
 
 
+# -- §3–4: the composed node→rack→cluster power stack -------------------------
+
+def cluster_power_trace() -> List[Row]:
+    """The headline numbers must fall out of *aggregation*: GPU → node
+    (host + 4×S9150 + fans + PSU curve) → rack → cluster (+ switches),
+    driven through the telemetry engine — ~1021 W/node, 57.2 kW and
+    5271.8 MFLOPS/W within 2%, with every layer accounted."""
+    from repro.power import (OperatingPoint, SyntheticHPL, lcsc_cluster,
+                             measure_efficiency, node_hpl_gflops, simulate)
+
+    op = OperatingPoint.green500()
+    cluster = lcsc_cluster()                       # 56 nodes, racks of 8
+    assert cluster.n_nodes == 56 and len(cluster.racks) == 7
+
+    # steady-state composition (load=1): the published operating point
+    comps = cluster.component_watts(op)
+    compute_w = sum(w for k, w in comps.items() if k != "network")
+    node_w = compute_w / cluster.n_nodes
+    perf = node_hpl_gflops(op) * cluster.n_nodes
+    eff = perf / compute_w * 1000.0
+    assert abs(node_w - 1021.0) / 1021.0 < 0.02        # ~1021 W/node
+    assert abs(compute_w - 57.2e3) / 57.2e3 < 0.02     # 57.2 kW cluster
+    assert abs(eff - 5271.8) / 5271.8 < 0.02           # 5271.8 MFLOPS/W
+    # the layers are really there: PSU loss and switches are accounted
+    assert comps["psu_loss"] > 0.0
+    assert comps["network"] == 257.0
+    # rack layer sums to the cluster (aggregation, not hard-coding)
+    rack_sum = sum(r.power(op) for r in cluster.racks)
+    assert abs(rack_sum + comps["network"]
+               - cluster.power(op)) < 1e-6
+
+    # the time-stepped trace through the engine: full-load core phase
+    # reproduces the same figures; Level 3 covers the whole run
+    t0 = time.time()
+    tr = simulate(SyntheticHPL(duration_s=1800.0), op, cluster=cluster)
+    sim_us = (time.time() - t0) * 1e6
+    core = tr.t < 0.70 * tr.duration                   # pre-tail samples
+    p_core = float(np.mean(tr.power_w[core]))
+    assert abs(p_core - 57.2e3) / 57.2e3 < 0.02
+    l3 = measure_efficiency(tr, 3)
+    assert l3.avg_power_w < p_core + 257.0             # tail derates power
+
+    rows: List[Row] = []
+    rows.append(("power/node_composed", 0.0,
+                 f"W={node_w:.1f};gpu={comps['gpu']/56:.1f};"
+                 f"host={comps['host']/56:.1f};fan={comps['fan']/56:.1f};"
+                 f"psu_loss={comps['psu_loss']/56:.1f}"))
+    rows.append(("power/cluster_composed", 0.0,
+                 f"kw={compute_w/1000:.2f};racks={len(cluster.racks)};"
+                 f"network_w={comps['network']:.0f};"
+                 f"mflops_w={eff:.1f};paper=5271.8"))
+    rows.append(("power/cluster_trace", sim_us,
+                 f"samples={len(tr.t)};core_kw={p_core/1000:.2f};"
+                 f"l3_mflops_w={l3.mflops_per_w:.1f};"
+                 f"energy_mj={tr.energy_j()/1e6:.1f}"))
+    return rows
+
+
 # -- §4: final result ---------------------------------------------------------
 
 def result_efficiency() -> List[Row]:

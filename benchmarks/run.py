@@ -26,6 +26,7 @@ def benches():
         paper_tables.fig1b_power,
         paper_tables.hpl_modes,
         paper_tables.green500_levels,
+        paper_tables.cluster_power_trace,
         paper_tables.result_efficiency,
         paper_tables.dslash_bw,
         paper_tables.autotune_operating_point,

@@ -1,30 +1,37 @@
-"""Reproduce the paper's Green500 measurement (§3-4): the 56-node Linpack
-run, the three measurement levels, and the Level-1 exploit.
+"""Reproduce the paper's Green500 measurement (§3-4) through the unified
+power engine: compose the 56-node cluster layer by layer, simulate the
+Linpack run into a PowerTrace, and apply the three measurement levels
+plus the Level-1 exploit.
 
   PYTHONPATH=src python examples/green500_measurement.py
 """
 import numpy as np
 
-from repro.core.energy import (level1_exploit, linpack_power_trace,
-                               measure_efficiency)
-from repro.core.energy.green500 import (extrapolation_error,
-                                        node_efficiencies,
-                                        select_median_nodes)
-from repro.core.energy.power_model import V_MIN, node_power
-from repro.core.energy.throttle import (HPL_GPU_UTIL, gpu_power_throttled,
-                                        hpl_node_perf)
+from repro.power import (OperatingPoint, SyntheticHPL,
+                         evaluate_operating_point, lcsc_cluster,
+                         level1_exploit, measure_efficiency, simulate)
+from repro.power.green500 import (extrapolation_error, node_efficiencies,
+                                  select_median_nodes)
 
 
 def main() -> None:
-    # the calibrated cluster model at the efficiency clock
-    node_gf = hpl_node_perf(774, [V_MIN] * 4)
-    pw = [gpu_power_throttled(774, V_MIN, util=HPL_GPU_UTIL)] * 4
-    node_w = node_power(774, [V_MIN] * 4, gpu_clamped_w=pw)
-    print(f"model: 56 nodes -> {node_gf*56/1000:.1f} TFLOPS @ "
-          f"{node_w*56/1000:.2f} kW = {node_gf/node_w*1000:.1f} MFLOPS/W")
+    # the composed model at the published operating point: GPU -> node
+    # (host + 4xS9150 + fans + PSU curve) -> rack -> cluster (+ switches)
+    op = OperatingPoint.green500()
+    cluster = lcsc_cluster()
+    node_gf, node_w = evaluate_operating_point(op)
+    comps = cluster.component_watts(op)
+    print(f"node:  {node_gf:.0f} GFLOPS @ {node_w:.1f} W  "
+          f"(gpu {comps['gpu']/56:.0f} + host {comps['host']/56:.0f} + "
+          f"fan {comps['fan']/56:.1f} + psu_loss {comps['psu_loss']/56:.1f})")
+    kw = sum(w for k, w in comps.items() if k != "network") / 1000
+    print(f"model: 56 nodes -> {node_gf*56/1000:.1f} TFLOPS @ {kw:.2f} kW "
+          f"= {node_gf/node_w*1000:.1f} MFLOPS/W "
+          f"(+{comps['network']:.0f} W of switches)")
     print("paper:  56 nodes -> 301.5 TFLOPS @ 57.20 kW = 5271.8 MFLOPS/W\n")
 
-    tr = linpack_power_trace(56, node_w, node_gf, duration_s=1800.0)
+    # the time-stepped run and the three measurement levels
+    tr = simulate(SyntheticHPL(duration_s=1800.0), op, cluster=cluster)
     for lvl in (1, 2, 3):
         r = measure_efficiency(tr, lvl)
         print(f"Level {lvl}: {r.mflops_per_w:7.1f} MFLOPS/W   ({r.notes})")

@@ -3,30 +3,22 @@
 A cost model is any callable ``evaluate(point) -> (perf_gflops,
 power_w)``.  Two families ship here:
 
-* **Analytic** — roofline math + the calibrated power models.  Fast,
+* **Analytic** — queries the unified power engine
+  (:mod:`repro.power.engine`) at the point's operating settings.  Fast,
   deterministic, CI-safe; this is how the paper's published operating
   point (774 MHz, 40% fan, efficiency-mode blocking) is *rediscovered*
   rather than hard-coded.
 * **Measured** — timed execution of the real code path (``linpack_run``
   or the Pallas kernels in interpret mode on CPU).  Wall-clock is
-  measured; power still comes from the models (CI hosts have no power
+  measured; power still comes from the engine (CI hosts have no power
   meter) — the ranking between candidates is what matters.
 
-Calibration notes for the analytic node model
----------------------------------------------
-``temp_from_fan``: the Fig. 1b trade is fan power (cubic in duty) vs the
-GPU static-power temperature slope.  The curve is pinned so 40% duty
-holds the GPUs at the published 55 °C steady state, with cooling
-degrading quadratically below that (40 + 2.4 / duty²) — airflow starves
-fast at low duty.  With the published fan (12 + 160·s³ W) and static
-(0.30 W/°C per GPU) slopes this places the node optimum at 40% duty,
-the published operating point.
-
-HPL blocking: efficiency-mode NB keeps the GPU duty cycle at the
-calibrated ``HPL_GPU_UTIL`` (0.908 — the Green500 run's value);
-performance-mode NB raises sustained utilization (~0.95) and buys ~0.2%
-more throughput.  Lookahead 0 serializes panel factorization (−4%);
-depths ≥ 1 overlap it fully.
+This module carries **no power model of its own**: the calibrated
+fan→temperature, blocking→utilization and node-power curves it once
+duplicated now live in :mod:`repro.power.model` /
+:mod:`repro.power.layers`, and the node cost model is a thin wrapper
+over :func:`repro.power.evaluate_operating_point` (the dedup test in
+``tests/test_power_dedup.py`` keeps it that way).
 """
 from __future__ import annotations
 
@@ -36,9 +28,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.energy.power_model import node_power
-from repro.core.energy.throttle import (HPL_GPU_UTIL, gpu_power_throttled,
-                                        hpl_node_perf)
+from repro.power.engine import evaluate_operating_point
+from repro.power.layers import NodeModel
+from repro.power.model import (OperatingPoint, temp_from_fan,  # noqa: F401
+                               tpu_chip_power, uniform_vids)
 from repro.roofline import hw
 
 Point = Dict[str, Any]
@@ -47,41 +40,13 @@ INFEASIBLE: Tuple[float, float] = (0.0, float("inf"))
 
 
 # ---------------------------------------------------------------------------
-# Analytic node model (the paper's GPU cluster)
+# Analytic node model (the paper's GPU cluster) — a view over the engine
 # ---------------------------------------------------------------------------
-
-def temp_from_fan(fan: float, *, ambient_c: float = 40.0) -> float:
-    """GPU steady-state temperature vs fan duty (calibrated: 55 °C @ 40%)."""
-    return ambient_c + 2.4 / max(float(fan), 0.05) ** 2
-
-
-def hpl_block_util(nb: float) -> float:
-    """Sustained GPU duty cycle vs HPL update blocking.  Efficiency-mode
-    NB (512) is the calibrated Green500-run value; bigger blocks keep the
-    DGEMM pipeline fuller (and hotter)."""
-    return float(np.clip(HPL_GPU_UTIL + 0.042 * np.log2(nb / 512.0),
-                         0.85, 0.95))
-
-
-def hpl_block_perf_scale(nb: float) -> float:
-    """Throughput vs blocking.  Saturating with a knee at the efficiency
-    NB: going 512 → 1024 buys ~1.1% (GEMM amortization is nearly flat up
-    there), while every halving below 512 costs quadratically (panel
-    latency and pipeline drain stop amortizing).  This is what makes 512
-    the MFLOPS/W winner and anything smaller a genuine perf cliff."""
-    return float(max(1.0 - 0.015 * (512.0 / nb) ** 2, 0.01))
-
-
-def lookahead_perf_scale(depth: int) -> float:
-    """Lookahead ≥ 1 fully overlaps panel factorization with the trailing
-    update (HPL-GPU); depth 0 serializes it."""
-    return 1.0 if depth >= 1 else 0.96
-
 
 @dataclass(frozen=True)
 class AnalyticNodeHPLModel:
-    """Node Linpack (perf, power) at an operating point, from the
-    calibrated throttle + power models.  Points are dicts with keys
+    """Node Linpack (perf, power) at an operating point, queried from the
+    power engine's layered node model.  Points are dicts with keys
     ``f_mhz, vid, fan, nb, lookahead`` (see ``space.operating_space``).
     """
 
@@ -91,21 +56,9 @@ class AnalyticNodeHPLModel:
         return self.evaluate(point)
 
     def evaluate(self, point: Point) -> Tuple[float, float]:
-        f = float(point["f_mhz"])
-        vid = float(point["vid"])
-        fan = float(point["fan"])
-        nb = float(point.get("nb", 512))
-        la = int(point.get("lookahead", 1))
-        temp = temp_from_fan(fan)
-        util = hpl_block_util(nb)
-        vids = [vid] * self.n_gpus
-        perf = (hpl_node_perf(f, vids, temp_c=temp, util=util)
-                * hpl_block_perf_scale(nb) * lookahead_perf_scale(la))
-        gpus = [gpu_power_throttled(f, vid, temp_c=temp, util=util)
-                ] * self.n_gpus
-        power = node_power(f, vids, fan=fan, temp_c=temp,
-                           gpu_clamped_w=gpus)
-        return perf, power
+        op = OperatingPoint.from_point(point)
+        node = NodeModel.from_vids(uniform_vids(self.n_gpus, op.vid))
+        return evaluate_operating_point(op, node)
 
 
 @dataclass(frozen=True)
@@ -184,7 +137,6 @@ class AnalyticDgemmModel:
         memory_s = hbm / hw.HBM_BW
         steps = (self.m // bm) * (self.n // bn) * (self.k // bk)
         t = max(compute_s, memory_s) + steps * GRID_STEP_OVERHEAD_S
-        from repro.core.energy.power_model import tpu_chip_power
         power = tpu_chip_power(1.0, compute_s / t, memory_s / t)
         return flops / t / 1e9, power
 
@@ -224,7 +176,6 @@ class AnalyticDslashModel:
         memory_s = hbm / hw.HBM_BW
         compute_s = flops / hw.PEAK_BF16_FLOPS
         t = max(memory_s, compute_s) + (T // tb) * GRID_STEP_OVERHEAD_S
-        from repro.core.energy.power_model import tpu_chip_power
         power = tpu_chip_power(1.0, compute_s / t, memory_s / t)
         return flops / t / 1e9, power
 
@@ -282,10 +233,10 @@ class MeasuredDgemmModel:
 @dataclass
 class MeasuredHPLModel:
     """Times ``linpack_run`` at the point's blocking; node power from the
-    analytic model at the point's electrical settings (defaults: the
-    paper's efficiency clock/fan).  Power uses the same block → NB-axis
-    mapping as :class:`AnalyticHPLBlockingModel`, so bigger blocks cost
-    watts here too — otherwise the efficiency trade could never pick a
+    engine at the point's electrical settings (defaults: the paper's
+    efficiency clock/fan).  Power uses the same block → NB-axis mapping
+    as :class:`AnalyticHPLBlockingModel`, so bigger blocks cost watts
+    here too — otherwise the efficiency trade could never pick a
     smaller block."""
 
     n: int = 192

@@ -20,17 +20,14 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterator, Sequence, Tuple
 
-from repro.core.energy.power_model import V_MAX, V_MIN
+from repro.power.model import (NB_EFFICIENCY, NB_PERFORMANCE,  # noqa: F401
+                               V_MAX, V_MIN)
 
 # The S9150 (Hawaii) exposes a small set of firmware DPM clock states;
 # 774 MHz is the one the paper locked for the Green500 run.  The grid is
 # the *supported* states, not a continuum — exactly like the real sweep.
 S9150_DPM_STATES_MHZ: Tuple[float, ...] = (300.0, 457.0, 562.0, 662.0,
                                            774.0, 851.0, 900.0)
-
-# Efficiency- vs performance-mode HPL update blocking (HPL-GPU's NB).
-NB_EFFICIENCY = 512
-NB_PERFORMANCE = 1024
 
 
 @dataclass(frozen=True)

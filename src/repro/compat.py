@@ -1,4 +1,4 @@
-"""Version bridges for jax APIs that moved between releases.
+"""Version bridges for jax/numpy APIs that moved between releases.
 
 ``jax.shard_map`` only exists as a top-level API in newer jax; older
 releases (e.g. the 0.4.x line in CI images) ship it as
@@ -6,12 +6,24 @@ releases (e.g. the 0.4.x line in CI images) ship it as
 ``check_vma`` and ``auto`` (the complement) instead of ``axis_names``.
 All repo code goes through this wrapper so the multi-device paths run
 on either line.
+
+``trapezoid`` bridges numpy's rename: ``np.trapezoid`` is numpy>=2.0
+only, ``np.trapz`` is deprecated there but the only spelling on the
+1.x line.  The supported numpy range is declared in pyproject.toml.
 """
 from __future__ import annotations
 
 from typing import Optional, Set
 
 import jax
+import numpy as np
+
+_np_trapezoid = getattr(np, "trapezoid", None) or np.trapz
+
+
+def trapezoid(y, x=None, dx: float = 1.0, axis: int = -1):
+    """Trapezoidal integration on either numpy line (1.22+ and 2.x)."""
+    return _np_trapezoid(y, x=x, dx=dx, axis=axis)
 
 
 def axis_size(axis_name: str) -> int:

@@ -1,5 +1,10 @@
-"""Energy core: power models, throttle simulation, DVFS planning,
-Green500 measurement methodology, chip variability, cluster scheduling."""
+"""Energy core — legacy façade over the unified power engine.
+
+Power models, throttle simulation, DVFS planning, Green500 measurement
+methodology, chip variability and cluster scheduling.  The power/energy
+implementation now lives in :mod:`repro.power`; this package keeps the
+pre-refactor import surface working (plus the DVFS planner and the
+scheduler, which remain here)."""
 from repro.core.energy.power_model import (  # noqa: F401
     NodePowerModel,
     S9150,
@@ -16,6 +21,7 @@ from repro.core.energy.throttle import (  # noqa: F401
 from repro.core.energy.dvfs import FreqPlan, plan_frequency  # noqa: F401
 from repro.core.energy.green500 import (  # noqa: F401
     LinpackTrace,
+    PowerTrace,
     level1_exploit,
     linpack_power_trace,
     measure_efficiency,

@@ -15,11 +15,11 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, Sequence, Tuple
 
-import numpy as np
-
 from repro.config import EnergyConfig
-from repro.core.energy.power_model import tpu_chip_power
 from repro.core.energy.throttle import tpu_sustained_scale
+from repro.power.model import fan_curve, tpu_chip_power  # noqa: F401
+# (fan_curve moved to repro.power.model; re-exported here for the
+# pre-refactor import path)
 
 
 @dataclass(frozen=True)
@@ -85,6 +85,7 @@ def plan_frequency(compute_s: float, memory_s: float, collective_s: float,
 # The paper's heuristic parameter search (node model, GPU cluster)
 # ---------------------------------------------------------------------------
 
+
 def heuristic_search(objective: Callable[[float, float], Tuple[float, float]],
                      freqs_mhz: Sequence[float],
                      fans: Sequence[float]) -> Dict:
@@ -104,9 +105,3 @@ def heuristic_search(objective: Callable[[float, float], Tuple[float, float]],
             if best is None or eff > best["mflops_per_w"] / 1000.0:
                 best = trace[-1]
     return {"best": best, "trace": trace}
-
-
-def fan_curve(load: float) -> float:
-    """Load-adaptive fan duty (paper: 'a curve that defines different FAN
-    duty cycles for different load levels', used at the end of the run)."""
-    return float(np.clip(0.15 + 0.25 * load / 0.9, 0.15, 0.40))

@@ -1,158 +1,21 @@
-"""Green500 power-measurement methodology (paper §3, EEHPC v1.2).
+"""Legacy import path for the Green500 measurement methodology.
 
-Implements the three measurement levels over a simulated Linpack power
-trace, the node-variability estimate, the median-node selection the authors
-used, and the Level-1 exploit they demonstrated (+30% overestimate).
+The implementation lives in :mod:`repro.power.green500` and operates on
+the unified :class:`repro.power.PowerTrace` telemetry type (the old
+``LinpackTrace`` dataclass is now a constructor shim producing one).
+This module re-exports the pre-refactor names so existing imports keep
+working.
 """
-from __future__ import annotations
-
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from repro.core.energy.dvfs import fan_curve
-from repro.core.energy.power_model import fan_power
-
-
-@dataclass
-class LinpackTrace:
-    """Time series of one Linpack run: cluster power and cumulative FLOPs."""
-
-    t: np.ndarray                # seconds
-    power_w: np.ndarray          # instantaneous cluster power
-    flops_rate: np.ndarray       # instantaneous GFLOPS
-    network_w: float = 0.0       # switches (measured separately at L3)
-
-    @property
-    def duration(self) -> float:
-        return float(self.t[-1] - self.t[0])
-
-    def total_flops(self) -> float:
-        return float(np.trapezoid(self.flops_rate, self.t))
-
-    def avg_power(self, t0: Optional[float] = None,
-                  t1: Optional[float] = None,
-                  include_network: bool = True) -> float:
-        t0 = self.t[0] if t0 is None else t0
-        t1 = self.t[-1] if t1 is None else t1
-        m = (self.t >= t0) & (self.t <= t1)
-        p = float(np.trapezoid(self.power_w[m], self.t[m]) / (t1 - t0))
-        return p + (self.network_w if include_network else 0.0)
-
-
-def linpack_power_trace(n_nodes: int, node_peak_w: float,
-                        node_gflops: float, *, duration_s: float = 3600.0,
-                        network_w: float = 257.0,
-                        adaptive_fan: bool = True,
-                        dt: float = 5.0) -> LinpackTrace:
-    """Synthetic HPL run: full power during factorization, decaying load in
-    the final ~25% as the trailing matrix shrinks (the shape that makes
-    Level-1 window-picking exploitable)."""
-    t = np.arange(0.0, duration_s + dt, dt)
-    x = t / duration_s
-    # load factor: ~1 until 75%, then N^3-ish tail down to ~35%
-    load = np.where(x < 0.75, 1.0, 0.35 + 0.65 * ((1 - x) / 0.25) ** 1.5)
-    dyn_frac = 0.75                    # dynamic fraction of node power
-    power = n_nodes * node_peak_w * (1 - dyn_frac + dyn_frac * load)
-    if adaptive_fan:
-        # end-of-run fan derating (paper §2 last para of the fan discussion)
-        fan_delta = np.array([fan_power(0.40) - fan_power(fan_curve(l))
-                              for l in load])
-        power = power - n_nodes * fan_delta
-    flops = n_nodes * node_gflops * load
-    return LinpackTrace(t, power, flops, network_w=network_w)
-
-
-# ---------------------------------------------------------------------------
-# Measurement levels (EEHPC methodology v1.2 — paper Table 2)
-# ---------------------------------------------------------------------------
-
-@dataclass
-class MeasurementResult:
-    level: int
-    measured_fraction: float
-    window: Tuple[float, float]
-    avg_power_w: float
-    perf_gflops: float
-    mflops_per_w: float
-    notes: str = ""
-
-
-def measure_efficiency(trace: LinpackTrace, level: int, *,
-                       measured_fraction: float = 1.0,
-                       window: Optional[Tuple[float, float]] = None,
-                       ) -> MeasurementResult:
-    """Apply one of the three measurement levels to a run trace.
-
-    L1: >=1/64 of the system, >=20% of the middle 80% of the run,
-        compute nodes only (network excluded).
-    L2: >=1/8, full runtime, network estimated (we add it).
-    L3: full system, full runtime, network measured.
-    """
-    perf = trace.total_flops() / trace.duration      # sustained GFLOPS
-    if level == 1:
-        lo = trace.t[0] + 0.1 * trace.duration
-        hi = trace.t[-1] - 0.1 * trace.duration
-        if window is None:
-            window = (lo, lo + 0.2 * (hi - lo))
-        p = trace.avg_power(window[0], window[1], include_network=False)
-        notes = "compute nodes only; window inside middle 80%"
-    elif level == 2:
-        window = (float(trace.t[0]), float(trace.t[-1]))
-        p = trace.avg_power(include_network=True)
-        notes = "full runtime; network estimated"
-    else:
-        window = (float(trace.t[0]), float(trace.t[-1]))
-        p = trace.avg_power(include_network=True)
-        notes = "full runtime; network measured"
-    frac = max(measured_fraction, {1: 1 / 64, 2: 1 / 8, 3: 1.0}[level])
-    return MeasurementResult(level, frac, window, p, perf,
-                             perf / p * 1000.0, notes)
-
-
-def level1_exploit(trace: LinpackTrace) -> MeasurementResult:
-    """Best (highest) efficiency obtainable within the letter of L1: slide
-    the minimum 20%-of-middle-80% window to the lowest-power region.
-
-    The paper showed this overestimates L-CSC's true efficiency by up to
-    ~30% — and that several top-ranked systems measured this way."""
-    lo = trace.t[0] + 0.1 * trace.duration
-    hi = trace.t[-1] - 0.1 * trace.duration
-    win = 0.2 * (hi - lo)
-    best = None
-    for start in np.linspace(lo, hi - win, 200):
-        r = measure_efficiency(trace, 1, window=(start, start + win))
-        if best is None or r.mflops_per_w > best.mflops_per_w:
-            best = r
-    best.notes = "L1 exploit: lowest-power window"
-    return best
-
-
-# ---------------------------------------------------------------------------
-# Node variability & median-node selection (paper §3)
-# ---------------------------------------------------------------------------
-
-def node_efficiencies(rng: np.random.Generator, n_nodes: int,
-                      base_mflops_w: float = 5215.0,
-                      sigma_frac: float = 0.008) -> np.ndarray:
-    """Single-node Linpack efficiencies across the population."""
-    return rng.normal(base_mflops_w, base_mflops_w * sigma_frac, n_nodes)
-
-
-def select_median_nodes(effs: Sequence[float], k: int = 2) -> List[int]:
-    """Paper: 'we used nodes with middle power consumption among the nodes
-    we had measured individually' — pick the k median nodes."""
-    order = np.argsort(effs)
-    mid = len(order) // 2
-    lo = max(0, mid - k // 2)
-    return list(order[lo:lo + k])
-
-
-def extrapolation_error(effs: Sequence[float], k: int = 2) -> float:
-    """|median-node estimate − population mean| / mean — the paper argues
-    this is <1% given the ±1.2% spread."""
-    effs = np.asarray(effs)
-    sel = select_median_nodes(effs, k)
-    est = float(np.mean(effs[sel]))
-    return abs(est - float(np.mean(effs))) / float(np.mean(effs))
+from repro.power.green500 import (  # noqa: F401
+    LEVEL_MIN_FRACTION,
+    LinpackTrace,
+    MeasurementResult,
+    extrapolation_error,
+    hpl_load_profile,
+    level1_exploit,
+    linpack_power_trace,
+    measure_efficiency,
+    node_efficiencies,
+    select_median_nodes,
+)
+from repro.power.trace import PowerTrace  # noqa: F401

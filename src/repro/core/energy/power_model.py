@@ -1,144 +1,42 @@
-"""Node / GPU power model calibrated to the paper's Fig. 1b and §3–4.
+"""Legacy import path for the node/GPU power model.
 
-Calibration targets (all published):
-  * S9150 TDP 275 W; stock 900 MHz, efficiency clock 774 MHz
-  * voltage IDs span 1.1425 V … 1.2 V at 900 MHz (Fig. 1a)
-  * optimum fan duty 40%, power slope steeper above 40% (Fig. 1b)
-  * Green500 run: 56 nodes, 57.2 kW → 1021 W/node at 774 MHz
-  * node Linpack 6175–6280 GFLOPS @900 MHz, ≈5384 GFLOPS @774 MHz
-    (301.5 TFLOPS / 56), efficiency 5271.8 MFLOPS/W
-
-Model:  P_gpu = P_static(V, T) + K_DYN · f · V² · util     (f in GHz)
-        P_node = P_host + Σ P_gpu + P_fan(s)
-The derivation of the constants is in DESIGN.md §6 / benchmarks; the
-benchmarks assert the reproduction against the published numbers.
+The calibrated models now live in :mod:`repro.power` (the unified
+power-telemetry engine): device-level constants and curves in
+``repro.power.model``, the node/rack/cluster composition (host + GPUs +
+fans + PSU-efficiency curve) in ``repro.power.layers``.  This module
+re-exports the pre-refactor names so existing imports keep working —
+no constant is defined here.
 """
-from __future__ import annotations
-
-import dataclasses
-from dataclasses import dataclass
-from typing import Sequence
-
-import numpy as np
-
-# ---------------------------------------------------------------------------
-# Device specs
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class GPUSpec:
-    name: str
-    stream_processors: int
-    fp64_flops_per_sp_per_cycle: float
-    tdp_w: float
-    mem_bw_gbs: float
-    mem_gb: int
-
-    def peak_fp64_gflops(self, f_ghz: float) -> float:
-        return (self.stream_processors * self.fp64_flops_per_sp_per_cycle
-                * f_ghz)
-
-
-S9150 = GPUSpec("FirePro S9150", 2816, 1.0, 275.0, 320.0, 16)
-S10000_CHIP = GPUSpec("FirePro S10000 (per chip)", 1792, 0.5, 187.5, 240.0, 6)
-
-# Published clocks / voltages
-STOCK_MHZ = 900
-EFFICIENT_MHZ = 774
-V_MIN = 1.1425           # best chips' voltage ID at 900 MHz
-V_MAX = 1.2              # worst chips'
-
-# Calibrated constants
-P_GPU_STATIC_40C = 35.0  # W at 40 °C, V_MIN
-TEMP_SLOPE_W_PER_C = 0.30
-K_DYN = 200.0            # W / (GHz · V²): V_MIN chips just avoid throttle at 900
-P_HOST_W = 200.0         # 2x10-core CPUs + 256 GB DIMMs + chipset + IB HCA
-FAN_BASE_W = 12.0
-FAN_CUBIC_W = 160.0      # node fans at 100% ≈ 172 W
-V_F_SLOPE = 0.0006       # V per MHz of downclock
-
-
-def voltage_at(f_mhz: float, vid_900: float) -> float:
-    """Operating voltage at frequency f for a chip with voltage-ID vid_900."""
-    return max(0.8, vid_900 - V_F_SLOPE * (STOCK_MHZ - f_mhz))
-
-
-def gpu_static_power(vid_900: float, temp_c: float = 55.0) -> float:
-    scale = (vid_900 / V_MIN) ** 2
-    return (P_GPU_STATIC_40C + TEMP_SLOPE_W_PER_C * max(temp_c - 40.0, 0.0)) \
-        * scale
-
-
-def gpu_dynamic_power(f_ghz: float, v: float, util: float = 1.0) -> float:
-    return K_DYN * f_ghz * v * v * util
-
-
-def gpu_power(f_mhz: float, vid_900: float, *, temp_c: float = 55.0,
-              util: float = 1.0, spec: GPUSpec = S9150) -> float:
-    """Un-throttled electrical power draw (may exceed TDP — the throttle
-    module clamps by reducing frequency, not by magic)."""
-    v = voltage_at(f_mhz, vid_900)
-    return gpu_static_power(vid_900, temp_c) + gpu_dynamic_power(
-        f_mhz / 1000.0, v, util)
-
-
-def fan_power(speed: float) -> float:
-    """Node fan power vs duty cycle in [0, 1] (cubic — Fig. 1b shape)."""
-    s = float(np.clip(speed, 0.0, 1.0))
-    return FAN_BASE_W + FAN_CUBIC_W * s ** 3
-
-
-def node_power(f_mhz: float, vids: Sequence[float], *, fan: float = 0.40,
-               temp_c: float = 55.0, util: float = 1.0,
-               gpu_clamped_w: Sequence[float] | None = None) -> float:
-    """Total node power.  If ``gpu_clamped_w`` is given (post-throttle), use
-    it; otherwise evaluate the unconstrained model."""
-    if gpu_clamped_w is not None:
-        gpus = float(np.sum(gpu_clamped_w))
-    else:
-        gpus = float(sum(gpu_power(f_mhz, v, temp_c=temp_c, util=util)
-                         for v in vids))
-    return P_HOST_W + gpus + fan_power(fan)
-
-
-@dataclass
-class NodePowerModel:
-    """Convenience wrapper binding a node's chip population."""
-
-    vids: Sequence[float]
-    fan: float = 0.40
-    temp_c: float = 55.0
-    spec: GPUSpec = S9150
-
-    def power(self, f_mhz: float, util: float = 1.0,
-              gpu_clamped_w: Sequence[float] | None = None) -> float:
-        return node_power(f_mhz, self.vids, fan=self.fan, temp_c=self.temp_c,
-                          util=util, gpu_clamped_w=gpu_clamped_w)
-
-    def with_fan(self, fan: float) -> "NodePowerModel":
-        return dataclasses.replace(self, fan=fan)
-
-
-def sample_vids(rng: np.random.Generator, n: int) -> np.ndarray:
-    """Manufacturing voltage-ID spread (paper: every ASIC differs)."""
-    # triangular-ish spread within the published [V_MIN, V_MAX]
-    return np.clip(rng.normal((V_MIN + V_MAX) / 2, 0.015, n), V_MIN, V_MAX)
-
-
-# ---------------------------------------------------------------------------
-# TPU-side power model (the framework target; assumed constants, documented)
-# ---------------------------------------------------------------------------
-
-TPU_IDLE_W = 60.0
-TPU_DYN_COMPUTE_W = 110.0    # MXU-bound at full clock
-TPU_DYN_MEM_W = 30.0         # HBM-bound component
-TPU_TDP_W = 200.0            # per-chip budget (v5e-class, assumed)
-
-
-def tpu_chip_power(freq_scale: float, compute_util: float,
-                   mem_util: float) -> float:
-    """P(f) for a TPU chip: dynamic compute power scales ~ f·V(f)² ≈ f²."""
-    f = float(np.clip(freq_scale, 0.3, 1.0))
-    return (TPU_IDLE_W + TPU_DYN_COMPUTE_W * f * f * compute_util
-            + TPU_DYN_MEM_W * mem_util)
+from repro.power.model import (  # noqa: F401
+    EFFICIENT_MHZ,
+    FAN_BASE_W,
+    FAN_CUBIC_W,
+    K_DYN,
+    P_GPU_STATIC_40C,
+    STOCK_MHZ,
+    S9150,
+    S10000_CHIP,
+    TEMP_SLOPE_W_PER_C,
+    TPU_DYN_COMPUTE_W,
+    TPU_DYN_MEM_W,
+    TPU_IDLE_W,
+    TPU_TDP_W,
+    V_F_SLOPE,
+    V_MAX,
+    V_MIN,
+    GPUSpec,
+    fan_power,
+    gpu_dynamic_power,
+    gpu_power,
+    gpu_static_power,
+    sample_vids,
+    tpu_chip_power,
+    voltage_at,
+)
+from repro.power.layers import (  # noqa: F401
+    P_HOST_DC_W,
+    NodeModel,
+    NodePowerModel,
+    PSUCurve,
+    node_power,
+)

@@ -12,14 +12,21 @@ preconditioning and reduced precision both enter through the byte count:
   * reduced inner precision scales every byte of the inner iterations.
 
 ``solver_energy`` turns measured iteration counts into the paper-style
-figure of merit (GFLOPS/W) so benchmarks can report plain-vs-even-odd
-deltas with the published S9150 constants.
+figure of merit (GFLOPS/W).  Device constants come from the unified
+power engine (:mod:`repro.power`) — the S9150 spec and the published
+bandwidth fraction are referenced, not re-declared — and each report
+carries the :class:`repro.power.PowerTrace` its energy was integrated
+from, so solver runs land on the same telemetry bus as everything else.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Optional
 
+from repro.configs.lcsc_lqcd import DSLASH_BW_FRACTION
 from repro.lqcd.dirac import dslash_bytes_per_site, dslash_flops_per_site
+from repro.power.model import S9150
+from repro.power.trace import PowerTrace, TraceRecorder
 
 # CG linear algebra per normal-op iteration: x/r/p updates and the two
 # reductions touch ~10 spinor-vector streams (24 reals per site each).
@@ -30,12 +37,12 @@ REALS_PER_SPINOR = 24
 @dataclass(frozen=True)
 class SolverHW:
     """Device constants for the bandwidth/power model (default: FirePro
-    S9150, the paper's GPU)."""
+    S9150, the paper's GPU — taken from the ``repro.power`` spec)."""
 
-    name: str = "S9150"
-    bandwidth_gbs: float = 320.0
-    bw_fraction: float = 0.80          # CL2QCD reaches ~80% of peak
-    power_w: float = 275.0             # board TDP
+    name: str = S9150.name
+    bandwidth_gbs: float = S9150.mem_bw_gbs
+    bw_fraction: float = DSLASH_BW_FRACTION    # CL2QCD reaches ~80% of peak
+    power_w: float = S9150.tdp_w               # board TDP
 
 
 S9150_HW = SolverHW()
@@ -50,6 +57,8 @@ class SolverEnergyReport:
     energy_j: float
     gflops: float                      # sustained, over the whole solve
     gflops_per_w: float
+    trace: Optional[PowerTrace] = field(default=None, repr=False,
+                                        compare=False)
 
 
 def normal_op_bytes(volume: int, real_bytes: int, *, even_odd: bool,
@@ -67,13 +76,22 @@ def solver_energy(name: str, volume: int, inner_ops: int, *,
                   outer_ops: int = 0, inner_real_bytes: int = 4,
                   outer_real_bytes: int = 4, even_odd: bool = False,
                   compressed_links: bool = True,
-                  hw: SolverHW = S9150_HW) -> SolverEnergyReport:
+                  hw: SolverHW = S9150_HW,
+                  recorder: Optional[TraceRecorder] = None,
+                  ) -> SolverEnergyReport:
     """Energy-to-solution estimate from iteration counts.
 
     ``inner_ops`` are normal-op applications at ``inner_real_bytes``
     precision; ``outer_ops`` are full-precision defect-correction steps
     (residual recomputation ≈ one Schur application ≈ half a normal op,
     counted as a full one to stay conservative).
+
+    The solve is emitted into a :class:`TraceRecorder` as a constant
+    memory-bound device-power phase; energy is integrated from the
+    resulting trace (``trace.energy_j()``), not from a private
+    watts×seconds product.  A shared ``recorder`` may carry earlier
+    phases — this solve is appended after its latest sample, so
+    sequential solves stack on one bus instead of overlapping at t=0.
     """
     b = (inner_ops * normal_op_bytes(volume, inner_real_bytes,
                                      even_odd=even_odd,
@@ -83,8 +101,20 @@ def solver_energy(name: str, volume: int, inner_ops: int, *,
                                        compressed_links=compressed_links))
     eff_bw = hw.bandwidth_gbs * 1e9 * hw.bw_fraction
     time_s = b / eff_bw
-    energy_j = time_s * hw.power_w
     flops = (inner_ops + outer_ops) * 2 * volume * dslash_flops_per_site()
     gflops = flops / time_s / 1e9
+
+    # explicit None check (an empty recorder is falsy but still the
+    # caller's bus); stack this phase after anything already recorded
+    rec = recorder if recorder is not None \
+        else TraceRecorder(source=f"solver:{name}")
+    t0 = rec.t_last
+    # memory-bound solve: flat device power over the run (two samples
+    # bound the phase; recorder grids finer if dt_s is set)
+    for t in (t0, t0 + time_s):
+        rec.emit(t, {"gpu": hw.power_w}, flops_rate=gflops, util=1.0)
+    trace = rec.trace()
+    energy_j = trace.energy_j(t0=t0, t1=t0 + time_s)
     return SolverEnergyReport(name, inner_ops + outer_ops, b, time_s,
-                              energy_j, gflops, gflops / hw.power_w)
+                              energy_j, gflops, gflops / hw.power_w,
+                              trace=trace)

@@ -1,4 +1,10 @@
-"""TDP throttle simulation (paper §2, Fig. 1a).
+"""TDP throttle *performance* curves (paper §2, Fig. 1a).
+
+The electrical side of throttling (``sustained_frequency``,
+``gpu_power_throttled``) lives in :mod:`repro.power.model` with the rest
+of the calibration constants; this module keeps the performance story
+built on top of it and re-exports the power-side names for the
+pre-refactor import path.
 
 The paper's key observations, reproduced by this model:
   * chips with higher voltage ID hit the TDP limit and throttle; the
@@ -13,8 +19,12 @@ from typing import Sequence, Tuple
 
 import numpy as np
 
-from repro.core.energy.power_model import (K_DYN, S9150, gpu_static_power,
-                                           voltage_at)
+from repro.power.model import (  # noqa: F401  (re-exported power side)
+    HPL_GPU_UTIL,
+    S9150,
+    gpu_power_throttled,
+    sustained_frequency,
+)
 
 # Oscillating between P-states loses pipeline efficiency vs constant clock
 OSC_PENALTY = 0.08
@@ -24,22 +34,6 @@ DGEMM_EFF = 0.493           # CL2QCD-era DGEMM efficiency vs fp64 peak
 # bundles the CPU DGEMM share and lookahead overlap; HPL's burstier GPU
 # duty cycle (util < 1) throttles less than the continuous DGEMM loop.
 HPL_NODE_SCALE = 1.256
-HPL_GPU_UTIL = 0.908
-
-
-def sustained_frequency(f_set_mhz: float, vid_900: float, *,
-                        temp_c: float = 55.0, util: float = 1.0,
-                        tdp_w: float = S9150.tdp_w) -> Tuple[float, bool]:
-    """Highest clock the TDP allows; returns (f_sustained_MHz, throttled)."""
-    v = voltage_at(f_set_mhz, vid_900)
-    p_static = gpu_static_power(vid_900, temp_c)
-    p_dyn = K_DYN * (f_set_mhz / 1000.0) * v * v * util
-    if p_static + p_dyn <= tdp_w:
-        return f_set_mhz, False
-    # clamp: solve P_static + K f v(f)^2 util = TDP (v approximately fixed
-    # at the set-point voltage — firmware lowers f, not V, under TDP)
-    f = (tdp_w - p_static) / (K_DYN * v * v * util) * 1000.0
-    return max(f, 100.0), True
 
 
 def effective_frequency(f_set_mhz: float, vid_900: float, *,
@@ -48,16 +42,6 @@ def effective_frequency(f_set_mhz: float, vid_900: float, *,
     f_sus, throttled = sustained_frequency(f_set_mhz, vid_900,
                                            temp_c=temp_c, util=util)
     return f_sus * (1.0 - OSC_PENALTY) if throttled else f_sus
-
-
-def gpu_power_throttled(f_set_mhz: float, vid_900: float, *,
-                        temp_c: float = 55.0, util: float = 1.0,
-                        tdp_w: float = S9150.tdp_w) -> float:
-    """Actual draw: TDP when throttling, model power otherwise."""
-    v = voltage_at(f_set_mhz, vid_900)
-    p = gpu_static_power(vid_900, temp_c) \
-        + K_DYN * (f_set_mhz / 1000.0) * v * v * util
-    return min(p, tdp_w)
 
 
 def dgemm_perf_gflops(f_set_mhz: float, vid_900: float, *,
@@ -106,8 +90,8 @@ def tpu_sustained_scale(freq_scale: float, compute_util: float,
     """TPU analogue: chip_eff < 1 models a worse-binned chip (higher draw).
 
     Returns (sustained freq scale, throttled)."""
-    from repro.core.energy.power_model import (TPU_DYN_COMPUTE_W,
-                                               TPU_DYN_MEM_W, TPU_IDLE_W)
+    from repro.power.model import (TPU_DYN_COMPUTE_W, TPU_DYN_MEM_W,
+                                   TPU_IDLE_W)
     p = (TPU_IDLE_W + TPU_DYN_COMPUTE_W * freq_scale ** 2 * compute_util
          / chip_eff + TPU_DYN_MEM_W * mem_util)
     if p <= tdp_w:

@@ -18,6 +18,7 @@ from repro.config import EnergyConfig
 from repro.configs.hpl import HPLConfig
 from repro.core.energy.dvfs import plan_frequency
 from repro.hpl.lu import blocked_lu, lu_solve
+from repro.power.trace import PowerTrace, TraceRecorder
 
 
 @dataclass
@@ -32,6 +33,7 @@ class LinpackResult:
     wall_s: float
     gflops: float
     energy_plan: Optional[Dict] = None
+    power_trace: Optional[PowerTrace] = None
 
 
 def linpack_residual(a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray) -> float:
@@ -76,6 +78,7 @@ def linpack_run(cfg: HPLConfig, *, energy: Optional[EnergyConfig] = None,
     raw = 2.0 * cfg.n ** 2 * cfg.block * steps  # masked full-width updates
 
     plan = None
+    trace = None
     if energy is not None:
         # roofline terms of the trailing update on the TARGET chip (v5e):
         from repro.roofline import hw
@@ -86,8 +89,17 @@ def linpack_run(cfg: HPLConfig, *, energy: Optional[EnergyConfig] = None,
         plan = {"freq_scale": fp.freq_scale, "power_w": fp.power_w,
                 "energy_per_run_j": fp.energy_per_step_j,
                 "perf_loss": fp.perf_loss, "dominant": fp.dominant}
+        # emit the run into the telemetry bus: chip power at the planned
+        # operating point over the measured wall time
+        rec = TraceRecorder(source="hpl.linpack")
+        for t in (0.0, wall):
+            rec.emit(t, {"chip": fp.power_w},
+                     flops_rate=useful / wall / 1e9,
+                     freq_scale=fp.freq_scale, util=1.0)
+        trace = rec.trace()
 
     return LinpackResult(
         n=cfg.n, block=cfg.block, mode=cfg.mode, residual=rnorm,
         passed=bool(rnorm < 16.0), useful_flops=useful, raw_flops=raw,
-        wall_s=wall, gflops=useful / wall / 1e9, energy_plan=plan)
+        wall_s=wall, gflops=useful / wall / 1e9, energy_plan=plan,
+        power_trace=trace)

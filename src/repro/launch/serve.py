@@ -15,6 +15,7 @@ import numpy as np
 from repro.config import (ARCH_IDS, EnergyConfig, ShapeConfig, get_arch)
 from repro.core.energy.dvfs import plan_frequency
 from repro.models.frontend import enc_len_for
+from repro.power.trace import TraceRecorder
 from repro.roofline.analytic import cost_for
 from repro.runtime.steps import make_decode_step, make_prefill_step
 from repro.config import SINGLE_POD_MESH
@@ -58,11 +59,19 @@ def main() -> None:
     # energy plan (decode is memory-bound -> deep clock derate, paper C5)
     shape = ShapeConfig("serve", total, B, "decode")
     ac = cost_for(cfg, shape, SINGLE_POD_MESH, kv_int8=args.kv_int8)
+    # prefill-shape cost for the prefill telemetry sample (ac is the
+    # per-decode-step cost)
+    ac_prefill = cost_for(cfg, ShapeConfig("serve_prefill", S, B, "prefill"),
+                          SINGLE_POD_MESH, kv_int8=args.kv_int8)
     plan = plan_frequency(ac.compute_s, ac.memory_s, ac.collective_s,
                           flops_per_step=ac.flops,
                           cfg=EnergyConfig(mode="efficiency"))
     print(f"[energy] decode dominant={plan.dominant} "
           f"freq={plan.freq_scale:.2f} power={plan.power_w:.0f}W")
+    # telemetry bus: prefill + every decoded token emit chip samples
+    recorder = TraceRecorder(source="launch.serve")
+    recorder.emit(0.0, {"chip": plan.power_w}, flops_rate=0.0,
+                  freq_scale=plan.freq_scale)
 
     t0 = time.time()
     logits, cache = prefill(params, batch)
@@ -78,7 +87,11 @@ def main() -> None:
             sl = tuple(slice(0, s) for s in cache[k].shape)
             full_cache[k] = full_cache[k].at[sl].set(cache[k])
     cache = full_cache
-    print(f"prefill {S} tokens x {B}: {time.time()-t0:.2f}s")
+    t_prefill = time.time() - t0
+    recorder.emit(t_prefill, {"chip": plan.power_w},
+                  flops_rate=ac_prefill.flops / max(t_prefill, 1e-9) / 1e9,
+                  freq_scale=plan.freq_scale)
+    print(f"prefill {S} tokens x {B}: {t_prefill:.2f}s")
 
     out_tokens = []
     tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
@@ -89,9 +102,15 @@ def main() -> None:
         tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
     jax.block_until_ready(logits)
     dt = time.time() - t0
+    recorder.emit(t_prefill + dt, {"chip": plan.power_w},
+                  flops_rate=ac.flops * args.gen / max(dt, 1e-9) / 1e9,
+                  freq_scale=plan.freq_scale)
     gen = np.concatenate(out_tokens, axis=1)
+    trace = recorder.trace()
     print(f"decoded {args.gen} tokens x {B} in {dt:.2f}s "
           f"({args.gen*B/dt:.1f} tok/s)")
+    print(f"[energy] {trace.energy_j():.1f} J over {trace.duration:.2f}s "
+          f"({trace.energy_j()/max(args.gen*B, 1):.2f} J/token)")
     print("sample:", gen[0][:16])
 
 

@@ -24,6 +24,7 @@ from repro.data import make_batch_iterator
 from repro.distributed.fault import FaultPolicy, FaultTolerantLoop
 from repro.models import init_params
 from repro.optim import adamw_init
+from repro.power.trace import TraceRecorder
 from repro.roofline.analytic import cost_for
 from repro.runtime.steps import make_train_step
 from repro.config import SINGLE_POD_MESH
@@ -65,7 +66,12 @@ def main() -> None:
     print(f"[energy] dominant={plan.dominant} freq={plan.freq_scale:.2f} "
           f"power={plan.power_w:.0f}W perf_loss={plan.perf_loss:.3%}")
 
-    energy_j = 0.0
+    # telemetry: each step emits a chip-power sample into the shared bus
+    # (energy comes from integrating the trace, not a private W×s product)
+    recorder = TraceRecorder(source="launch.train")
+    recorder.emit(0.0, {"chip": plan.power_w}, flops_rate=0.0,
+                  freq_scale=plan.freq_scale)
+    t_run = 0.0
     last_good = None
     for step in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in next(data).items()}
@@ -74,7 +80,10 @@ def main() -> None:
         loss = float(metrics["loss"])
         wall = time.time() - t0
         h = loop.observe(step, wall, loss)
-        energy_j += plan.power_w * wall
+        t_run += wall
+        recorder.emit(t_run, {"chip": plan.power_w},
+                      flops_rate=ac.flops / max(wall, 1e-9) / 1e9,
+                      freq_scale=plan.freq_scale)
         if not h.ok and loop.should_rollback(h):
             print(f"[fault] step {step}: {h.reason}; rolling back")
             if last_good is not None:
@@ -89,7 +98,9 @@ def main() -> None:
                   f"wall {wall*1e3:7.1f}ms gnorm "
                   f"{float(metrics['grad_norm']):.3f}")
     ckpt.wait()
-    print(f"[energy] total {energy_j/3600:.4f} Wh over {args.steps} steps "
+    trace = recorder.trace()
+    print(f"[energy] total {trace.energy_j()/3600:.4f} Wh over "
+          f"{args.steps} steps, avg {trace.avg_power():.0f}W "
           f"({loop.straggler_report()})")
 
 

@@ -1,0 +1,84 @@
+"""Unified power-telemetry engine — the single source of truth for
+power and energy in this repo.
+
+Layered like ExaDigiT/RAPS: calibrated device models compose into a
+node→rack→cluster simulation that any workload emits telemetry into and
+every consumer (Green500 methodology, autotuner, HPL/LQCD/launch
+drivers, paper-table benchmarks) reads from.
+
+  :mod:`repro.power.model`     calibrated electrical constants + curves
+                               (GPU, fan, PSU-side throttle, TPU chip)
+  :mod:`repro.power.layers`    GPU → node (host + 4×S9150 + fans + PSU
+                               curve) → rack → cluster (+ switches)
+  :mod:`repro.power.trace`     ``PowerTrace`` + ``TraceRecorder`` bus
+  :mod:`repro.power.engine`    ``simulate(workload, op) → PowerTrace``
+  :mod:`repro.power.green500`  L1/L2/L3 methodology over ``PowerTrace``
+
+Quick use::
+
+    from repro.power import OperatingPoint, SyntheticHPL, simulate
+    trace = simulate(SyntheticHPL(1800.0), OperatingPoint.green500())
+    trace.avg_power()        # ≈ 57.2 kW + 257 W of switches
+
+The old entry points (``repro.core.energy.power_model`` and friends)
+remain importable as thin shims over this package.
+"""
+from repro.power.model import (  # noqa: F401
+    EFFICIENT_MHZ,
+    HPL_GPU_UTIL,
+    K_DYN,
+    NB_EFFICIENCY,
+    NB_PERFORMANCE,
+    STOCK_MHZ,
+    S9150,
+    V_MAX,
+    V_MIN,
+    GPUSpec,
+    OperatingPoint,
+    PowerModel,
+    TPUChipModel,
+    fan_curve,
+    fan_power,
+    gpu_power,
+    gpu_power_throttled,
+    hpl_block_perf_scale,
+    hpl_block_util,
+    lookahead_perf_scale,
+    sample_vids,
+    sustained_frequency,
+    temp_from_fan,
+    tpu_chip_power,
+    voltage_at,
+)
+from repro.power.layers import (  # noqa: F401
+    LCSC_PSU,
+    ClusterModel,
+    GPUModel,
+    NodeModel,
+    NodePowerModel,
+    PSUCurve,
+    RackModel,
+    lcsc_cluster,
+    lcsc_node,
+    node_power,
+)
+from repro.power.trace import NETWORK, PowerTrace, TraceRecorder  # noqa: F401
+from repro.power.engine import (  # noqa: F401
+    ConstantLoad,
+    ReplayWorkload,
+    SyntheticHPL,
+    Workload,
+    evaluate_operating_point,
+    node_hpl_gflops,
+    simulate,
+)
+from repro.power.green500 import (  # noqa: F401
+    LinpackTrace,
+    MeasurementResult,
+    extrapolation_error,
+    level1_exploit,
+    linpack_power_trace,
+    measure_efficiency,
+    node_efficiencies,
+    select_median_nodes,
+)

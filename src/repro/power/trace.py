@@ -1,0 +1,192 @@
+"""Time-stepped power telemetry: the ``PowerTrace`` type and the
+``TraceRecorder`` event bus.
+
+RAPS-style design (ExaDigiT): one fixed-interval, per-component power
+time series that every workload emits into and every consumer (Green500
+methodology, paper-table benchmarks, launch drivers) reads from.  The
+trace is a struct-of-arrays:
+
+  * ``t``           sample times [s]
+  * ``components``  component name → watts array (``gpu``, ``host``,
+                    ``fan``, ``psu_loss``, ``network``, ``chip_*`` …)
+  * ``flops_rate``  instantaneous GFLOPS (for efficiency figures)
+  * ``aux``         optional extra series (utilization, clocks [MHz],
+                    temperature [°C], …)
+
+Compute power (``power_w``) excludes the ``network`` component — the
+Green500 methodology treats switches separately per measurement level.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.compat import trapezoid
+
+NETWORK = "network"
+
+
+@dataclass
+class PowerTrace:
+    """Fixed- or variable-interval per-component power time series."""
+
+    t: np.ndarray
+    components: Dict[str, np.ndarray]
+    flops_rate: np.ndarray
+    aux: Dict[str, np.ndarray] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.t = np.asarray(self.t, dtype=float)
+        n = self.t.shape[0]
+        self.components = {k: np.broadcast_to(
+            np.asarray(v, dtype=float), (n,)).copy()
+            for k, v in self.components.items()}
+        self.flops_rate = np.broadcast_to(
+            np.asarray(self.flops_rate, dtype=float), (n,)).copy()
+        self.aux = {k: np.asarray(v, dtype=float) for k, v in self.aux.items()}
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_arrays(cls, t, power_w, flops_rate, *, network_w: float = 0.0,
+                    component: str = "node", **meta) -> "PowerTrace":
+        """Single-component trace (the legacy ``LinpackTrace`` shape)."""
+        t = np.asarray(t, dtype=float)
+        comps = {component: np.asarray(power_w, dtype=float)}
+        if network_w:
+            comps[NETWORK] = np.full(t.shape, float(network_w))
+        return cls(t, comps, np.asarray(flops_rate, dtype=float), meta=meta)
+
+    # -- views --------------------------------------------------------------
+
+    @property
+    def power_w(self) -> np.ndarray:
+        """Compute-subsystem wall power (all components except network)."""
+        out = np.zeros_like(self.t)
+        for name, w in self.components.items():
+            if name != NETWORK:
+                out = out + w
+        return out
+
+    @property
+    def network_w(self) -> float:
+        """Average switch power (0 when the trace has no network data)."""
+        w = self.components.get(NETWORK)
+        return float(np.mean(w)) if w is not None and len(w) else 0.0
+
+    @property
+    def duration(self) -> float:
+        return float(self.t[-1] - self.t[0])
+
+    def total_flops(self) -> float:
+        return float(trapezoid(self.flops_rate, self.t))
+
+    def _window_integral(self, y: np.ndarray, t0: float, t1: float) -> float:
+        """∫y dt over [t0, t1], linearly interpolating at the window edges
+        (windows need not land on sample times)."""
+        m = (self.t > t0) & (self.t < t1)
+        ts = np.concatenate(([t0], self.t[m], [t1]))
+        ys = np.concatenate(([np.interp(t0, self.t, y)], y[m],
+                             [np.interp(t1, self.t, y)]))
+        return float(trapezoid(ys, ts))
+
+    def avg_power(self, t0: Optional[float] = None,
+                  t1: Optional[float] = None,
+                  include_network: bool = True) -> float:
+        """Time-averaged power over [t0, t1] (defaults: the full trace)."""
+        t0 = float(self.t[0]) if t0 is None else t0
+        t1 = float(self.t[-1]) if t1 is None else t1
+        if t1 <= t0:
+            raise ValueError(f"empty averaging window [{t0}, {t1}]")
+        p = self._window_integral(self.power_w, t0, t1) / (t1 - t0)
+        net = self.components.get(NETWORK)
+        if include_network and net is not None:
+            p += self._window_integral(net, t0, t1) / (t1 - t0)
+        return p
+
+    def energy_j(self, include_network: bool = True,
+                 t0: Optional[float] = None,
+                 t1: Optional[float] = None) -> float:
+        """∫P dt — over [t0, t1] when given, else the whole trace."""
+        total = self.power_w
+        net = self.components.get(NETWORK)
+        if include_network and net is not None:
+            total = total + net
+        if t0 is None and t1 is None:
+            return float(trapezoid(total, self.t))
+        t0 = float(self.t[0]) if t0 is None else t0
+        t1 = float(self.t[-1]) if t1 is None else t1
+        return self._window_integral(total, t0, t1)
+
+    def component_energy_j(self) -> Dict[str, float]:
+        return {name: float(trapezoid(w, self.t))
+                for name, w in self.components.items()}
+
+    def scaled(self, factor: float) -> "PowerTrace":
+        """Power/flops scaled by ``factor`` (e.g. node trace → k nodes)."""
+        return PowerTrace(self.t.copy(),
+                          {k: w * factor for k, w in self.components.items()},
+                          self.flops_rate * factor,
+                          aux=dict(self.aux), meta=dict(self.meta))
+
+
+class TraceRecorder:
+    """Telemetry event bus: workloads ``emit`` samples, consumers take the
+    assembled :class:`PowerTrace`.
+
+    With ``dt_s`` set, ``trace()`` resamples every series onto the fixed
+    interval grid (RAPS-style); otherwise the raw emission times are
+    kept.  Components missing from a sample read as 0 W at that time.
+    """
+
+    def __init__(self, *, dt_s: Optional[float] = None, source: str = ""):
+        self.dt_s = dt_s
+        self.source = source
+        self._rows: List[Tuple[float, Dict[str, float], float,
+                               Dict[str, float]]] = []
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    @property
+    def t_last(self) -> float:
+        """Latest emitted sample time (0.0 on an empty recorder) — lets
+        sequential phases stack onto one shared bus."""
+        return max(r[0] for r in self._rows) if self._rows else 0.0
+
+    def emit(self, t: float, watts: Dict[str, float], *,
+             flops_rate: float = 0.0, **aux: float) -> None:
+        """Record one sample: absolute time [s], component watts,
+        instantaneous GFLOPS, and any extra series (util=, f_mhz=,
+        temp_c=, …)."""
+        self._rows.append((float(t), {k: float(v) for k, v in watts.items()},
+                           float(flops_rate),
+                           {k: float(v) for k, v in aux.items()}))
+
+    def trace(self) -> PowerTrace:
+        if not self._rows:
+            raise ValueError("TraceRecorder has no samples")
+        rows = sorted(self._rows, key=lambda r: r[0])
+        t = np.array([r[0] for r in rows])
+        comp_names = sorted({k for r in rows for k in r[1]})
+        aux_names = sorted({k for r in rows for k in r[3]})
+        comps = {name: np.array([r[1].get(name, 0.0) for r in rows])
+                 for name in comp_names}
+        flops = np.array([r[2] for r in rows])
+        aux = {name: np.array([r[3].get(name, 0.0) for r in rows])
+               for name in aux_names}
+        if self.dt_s is not None and len(rows) > 1:
+            grid = np.arange(t[0], t[-1] + 0.5 * self.dt_s, self.dt_s)
+            comps = {n: np.interp(grid, t, w) for n, w in comps.items()}
+            aux = {n: np.interp(grid, t, w) for n, w in aux.items()}
+            flops = np.interp(grid, t, flops)
+            t = grid
+        meta: Dict[str, Any] = {}
+        if self.source:
+            meta["source"] = self.source
+        if self.dt_s is not None:
+            meta["dt_s"] = self.dt_s
+        return PowerTrace(t, comps, flops, aux=aux, meta=meta)

@@ -1,0 +1,148 @@
+"""Green500 methodology edge cases against the unified PowerTrace type:
+measurement-window rules on short traces, network-power handling per
+level, and the Level-1 exploit bounds (paper §3, EEHPC v1.2)."""
+import numpy as np
+import pytest
+
+from repro.power import (OperatingPoint, PowerTrace, SyntheticHPL,
+                         level1_exploit, measure_efficiency, simulate)
+from repro.power.green500 import LinpackTrace, linpack_power_trace
+
+
+def _flat_trace(duration=100.0, n=11, power=1000.0, flops=5000.0,
+                network=50.0):
+    t = np.linspace(0.0, duration, n)
+    return PowerTrace.from_arrays(t, np.full(n, power), np.full(n, flops),
+                                  network_w=network)
+
+
+# -- window rules -------------------------------------------------------------
+
+def test_l1_default_window_sits_in_middle_80_percent():
+    tr = _flat_trace()
+    r = measure_efficiency(tr, 1)
+    lo, hi = 10.0, 90.0                       # middle 80% of [0, 100]
+    assert r.window[0] >= lo and r.window[1] <= hi
+    assert r.window[1] - r.window[0] == pytest.approx(0.2 * (hi - lo))
+
+
+def test_l1_rejects_window_outside_core_phase():
+    tr = _flat_trace()
+    with pytest.raises(ValueError, match="middle 80%"):
+        measure_efficiency(tr, 1, window=(0.0, 40.0))       # starts too early
+    with pytest.raises(ValueError, match="middle 80%"):
+        measure_efficiency(tr, 1, window=(60.0, 99.0))      # ends too late
+
+
+def test_l1_rejects_too_short_window():
+    tr = _flat_trace()
+    with pytest.raises(ValueError, match="20%"):
+        measure_efficiency(tr, 1, window=(40.0, 45.0))      # 5s < 16s floor
+
+
+def test_l1_rejects_trace_too_short_to_window():
+    """Two samples 10s apart: the middle-80% core phase holds fewer than
+    two samples — L1 cannot produce a meaningful average."""
+    tr = PowerTrace.from_arrays([0.0, 10.0], [1000.0, 1000.0],
+                                [5000.0, 5000.0])
+    with pytest.raises(ValueError, match="Level 1"):
+        measure_efficiency(tr, 1)
+
+
+def test_l2_l3_use_full_runtime_even_on_short_traces():
+    """L2/L3 never window: a 3-sample, 10-second trace still averages the
+    whole run."""
+    t = [0.0, 5.0, 10.0]
+    tr = PowerTrace.from_arrays(t, [1000.0, 1000.0, 500.0],
+                                [5000.0] * 3, network_w=25.0)
+    for level in (2, 3):
+        r = measure_efficiency(tr, level)
+        assert r.window == (0.0, 10.0)
+        # trapezoid mean of [1000, 1000, 500] + 25 W of switches
+        assert r.avg_power_w == pytest.approx(875.0 + 25.0)
+
+
+def test_degenerate_traces_rejected():
+    one = PowerTrace.from_arrays([0.0], [1000.0], [1.0])
+    for level in (1, 2, 3):
+        with pytest.raises(ValueError, match="short"):
+            measure_efficiency(one, level)
+    with pytest.raises(ValueError):
+        measure_efficiency(_flat_trace(), 4)                # unknown level
+
+
+def test_measured_fraction_floors():
+    tr = _flat_trace()
+    assert measure_efficiency(tr, 1, measured_fraction=0.001) \
+        .measured_fraction == pytest.approx(1 / 64)
+    assert measure_efficiency(tr, 2, measured_fraction=0.5) \
+        .measured_fraction == pytest.approx(0.5)
+    assert measure_efficiency(tr, 3).measured_fraction == 1.0
+
+
+# -- network-power handling ---------------------------------------------------
+
+def test_network_excluded_at_l1_included_at_l3():
+    tr = _flat_trace(power=1000.0, network=100.0)
+    l1 = measure_efficiency(tr, 1)
+    l3 = measure_efficiency(tr, 3)
+    assert l1.avg_power_w == pytest.approx(1000.0)          # nodes only
+    assert l3.avg_power_w == pytest.approx(1100.0)          # + switches
+    assert l1.mflops_per_w > l3.mflops_per_w
+
+
+def test_l3_network_inclusion_on_simulated_cluster_trace():
+    """Through the engine: the L3 average must carry the switch watts the
+    cluster model attaches, L1 must not."""
+    from repro.power import lcsc_cluster
+    cl = lcsc_cluster(8, nodes_per_rack=4, network_w=40.0)
+    tr = simulate(SyntheticHPL(duration_s=400.0), OperatingPoint.green500(),
+                  cluster=cl, dt_s=5.0)
+    l1 = measure_efficiency(tr, 1)
+    l3 = measure_efficiency(tr, 3)
+    # network shows up in L3 only (trace power is load-shaped, so compare
+    # via the explicit component)
+    assert tr.network_w == pytest.approx(40.0)
+    assert l3.avg_power_w == pytest.approx(
+        tr.avg_power(include_network=False) + 40.0)
+    w0, w1 = l1.window
+    assert l1.avg_power_w == pytest.approx(
+        tr.avg_power(w0, w1, include_network=False))
+
+
+# -- the L1 exploit -----------------------------------------------------------
+
+def test_l1_exploit_on_engine_trace_bounds():
+    """The paper's +30%-class overestimate: sliding the minimal L1 window
+    into the low-power tail inflates efficiency by 10–45%."""
+    tr = simulate(SyntheticHPL(duration_s=1800.0), OperatingPoint.green500(),
+                  dt_s=10.0)
+    l3 = measure_efficiency(tr, 3)
+    ex = level1_exploit(tr)
+    over = ex.mflops_per_w / l3.mflops_per_w - 1.0
+    assert 0.10 < over < 0.45
+    # the exploit stayed within the letter of the rules
+    lo = tr.t[0] + 0.1 * tr.duration
+    hi = tr.t[-1] - 0.1 * tr.duration
+    assert ex.window[0] >= lo - 1e-6 and ex.window[1] <= hi + 1e-6
+
+
+def test_l1_exploit_flat_trace_gains_nothing():
+    tr = _flat_trace(duration=1000.0, n=201)
+    l1 = measure_efficiency(tr, 1)
+    ex = level1_exploit(tr)
+    assert ex.mflops_per_w == pytest.approx(l1.mflops_per_w, rel=1e-9)
+
+
+# -- legacy constructor shim --------------------------------------------------
+
+def test_linpack_trace_shim_matches_powertrace():
+    t = np.linspace(0.0, 100.0, 21)
+    tr = LinpackTrace(t, np.full(21, 900.0), np.full(21, 4000.0),
+                      network_w=30.0)
+    assert isinstance(tr, PowerTrace)
+    assert tr.network_w == pytest.approx(30.0)
+    legacy = linpack_power_trace(4, 1000.0, 5000.0, duration_s=600.0)
+    assert isinstance(legacy, PowerTrace)
+    assert legacy.avg_power(include_network=False) \
+        < 4 * 1000.0                       # tail + fan derate below peak

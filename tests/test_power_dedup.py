@@ -1,0 +1,106 @@
+"""Calibration-constant dedup: after the repro.power refactor exactly
+one definition of each calibrated power constant/curve may exist.
+
+Two enforcement angles:
+  * import identity — the legacy paths (``core.energy.*``, ``autotune``)
+    must re-export the *same objects* as ``repro.power``, not copies;
+  * source scan — the modules that used to carry private copies must
+    not define them (or their literal values) anymore.
+"""
+import importlib
+import inspect
+from pathlib import Path
+
+import repro.autotune as autotune
+import repro.autotune.measure as measure
+import repro.autotune.space as space
+import repro.core.energy.dvfs as dvfs
+import repro.core.energy.green500 as legacy_green500
+import repro.core.energy.power_model as legacy_pm
+import repro.core.energy.throttle as throttle
+import repro.power.green500 as power_green500
+import repro.power.layers as layers
+import repro.power.model as pm
+
+# (the package re-exports the solver_energy *function* under this name,
+# so fetch the module explicitly)
+solver_energy = importlib.import_module("repro.core.energy.solver_energy")
+
+SHARED_FUNCTIONS = [
+    "voltage_at", "gpu_static_power", "gpu_dynamic_power", "gpu_power",
+    "fan_power", "sample_vids", "tpu_chip_power",
+]
+SHARED_CONSTANTS = [
+    "K_DYN", "P_GPU_STATIC_40C", "TEMP_SLOPE_W_PER_C", "FAN_BASE_W",
+    "FAN_CUBIC_W", "V_F_SLOPE", "V_MIN", "V_MAX", "STOCK_MHZ",
+    "EFFICIENT_MHZ", "TPU_IDLE_W", "TPU_DYN_COMPUTE_W", "TPU_DYN_MEM_W",
+    "TPU_TDP_W",
+]
+
+
+def test_legacy_power_model_is_a_pure_reexport():
+    for name in SHARED_FUNCTIONS:
+        assert getattr(legacy_pm, name) is getattr(pm, name), name
+    for name in SHARED_CONSTANTS:
+        assert getattr(legacy_pm, name) == getattr(pm, name), name
+    assert legacy_pm.S9150 is pm.S9150
+    assert legacy_pm.node_power is layers.node_power
+    assert legacy_pm.NodeModel is layers.NodeModel
+
+
+def test_throttle_power_side_is_shared():
+    assert throttle.sustained_frequency is pm.sustained_frequency
+    assert throttle.gpu_power_throttled is pm.gpu_power_throttled
+    assert throttle.HPL_GPU_UTIL == pm.HPL_GPU_UTIL
+
+
+def test_autotune_has_no_private_power_model():
+    """The calibration curves the autotuner duplicated pre-refactor must
+    be the repro.power objects, and its source must not re-define them."""
+    assert measure.temp_from_fan is pm.temp_from_fan
+    assert autotune.temp_from_fan is pm.temp_from_fan
+    assert space.NB_EFFICIENCY is pm.NB_EFFICIENCY
+    assert autotune.NB_EFFICIENCY is pm.NB_EFFICIENCY
+    src = Path(measure.__file__).read_text()
+    for marker in ("def temp_from_fan", "def hpl_block_util",
+                   "def hpl_block_perf_scale", "def lookahead_perf_scale",
+                   "def node_power"):
+        assert marker not in src, f"{marker} re-defined in autotune.measure"
+
+
+def test_green500_and_dvfs_are_shims():
+    assert legacy_green500.measure_efficiency \
+        is power_green500.measure_efficiency
+    assert legacy_green500.linpack_power_trace \
+        is power_green500.linpack_power_trace
+    assert legacy_green500.level1_exploit is power_green500.level1_exploit
+    assert dvfs.fan_curve is pm.fan_curve
+    src = Path(dvfs.__file__).read_text()
+    assert "def fan_curve" not in src
+
+
+def test_solver_energy_references_the_spec_not_literals():
+    hw = solver_energy.S9150_HW
+    assert hw.power_w == pm.S9150.tdp_w
+    assert hw.bandwidth_gbs == pm.S9150.mem_bw_gbs
+    src = inspect.getsource(solver_energy)
+    # the pre-refactor private literals (275.0 TDP / 320.0 GB/s) are gone
+    assert "275.0" not in src and "320.0" not in src
+
+
+def test_no_stray_calibration_literals_outside_repro_power():
+    """The node-power calibration literals live only in repro/power; any
+    other module needing them must import, not re-declare.  (Scans the
+    src tree for the distinctive constant values.)"""
+    src_root = Path(pm.__file__).resolve().parents[1]   # .../src/repro
+    offenders = []
+    for py in src_root.rglob("*.py"):
+        rel = py.relative_to(src_root)
+        if rel.parts[0] == "power":
+            continue
+        text = py.read_text()
+        for literal in ("2816", "K_DYN = ", "FAN_CUBIC_W = ",
+                        "P_GPU_STATIC_40C = ", "0.908"):
+            if literal in text:
+                offenders.append(f"{rel}: {literal}")
+    assert not offenders, offenders

@@ -1,0 +1,200 @@
+"""Unified power engine: layered node→rack→cluster aggregation against
+the published operating point, the telemetry recorder/trace round-trip,
+and the simulate() driver's synthetic + replay modes."""
+import numpy as np
+import pytest
+
+from repro.power import (ClusterModel, ConstantLoad, NodeModel,
+                         OperatingPoint, PowerTrace, ReplayWorkload,
+                         SyntheticHPL, TraceRecorder,
+                         evaluate_operating_point, lcsc_cluster, lcsc_node,
+                         simulate)
+from repro.power.layers import LCSC_PSU
+
+
+# -- layered aggregation ------------------------------------------------------
+
+def test_node_composition_reproduces_published_wall_power():
+    """host + 4×S9150 + fans behind the PSU curve → ~1021 W at the
+    Green500 operating point (published: 57.2 kW / 56 nodes)."""
+    op = OperatingPoint.green500()
+    node = lcsc_node()
+    comps = node.component_watts(op)
+    assert set(comps) == {"gpu", "host", "fan", "psu_loss"}
+    total = sum(comps.values())
+    assert total == pytest.approx(node.power(op))
+    assert abs(total - 1021.0) / 1021.0 < 0.02
+    # every layer draws something, and the PSU really loses power
+    assert all(w > 0 for w in comps.values())
+    dc = comps["gpu"] + comps["host"] + comps["fan"]
+    assert comps["psu_loss"] == pytest.approx(LCSC_PSU.loss_w(dc))
+
+
+def test_psu_curve_shape():
+    """Platinum-class: peak efficiency near half load, worse at idle and
+    full load; wall power always exceeds DC power."""
+    peak = LCSC_PSU.efficiency(LCSC_PSU.load_peak * LCSC_PSU.rated_w)
+    assert peak == pytest.approx(LCSC_PSU.eff_peak)
+    assert LCSC_PSU.efficiency(0.1 * LCSC_PSU.rated_w) < peak
+    assert LCSC_PSU.efficiency(1.0 * LCSC_PSU.rated_w) < peak
+    for dc in (100.0, 500.0, 958.0, 1600.0):
+        assert LCSC_PSU.wall_power(dc) > dc
+
+
+def test_cluster_aggregation_not_hardcoded():
+    """Cluster watts = Σ racks = Σ nodes (+ switches), and scale with the
+    node count — the 57.2 kW figure falls out of composition."""
+    op = OperatingPoint.green500()
+    cl = lcsc_cluster()
+    assert cl.n_nodes == 56 and len(cl.racks) == 7
+    node_sum = sum(n.power(op) for n in cl.nodes)
+    rack_sum = sum(r.power(op) for r in cl.racks)
+    assert node_sum == pytest.approx(rack_sum)
+    assert cl.power(op) == pytest.approx(rack_sum + cl.network_w)
+    assert abs(node_sum - 57.2e3) / 57.2e3 < 0.02
+    # half the nodes -> half the compute power, same switches
+    half = lcsc_cluster(28)
+    assert half.power(op) - half.network_w == pytest.approx(node_sum / 2)
+
+
+def test_cluster_efficiency_matches_paper():
+    op = OperatingPoint.green500()
+    perf, power = evaluate_operating_point(op)
+    assert abs(perf / power * 1000.0 - 5271.8) / 5271.8 < 0.02
+
+
+def test_load_scales_gpu_dynamic_power_only():
+    op = OperatingPoint.green500()
+    node = lcsc_node()
+    full = node.component_watts(op, load=1.0)
+    idle = node.component_watts(op, load=0.0)
+    assert idle["gpu"] < full["gpu"]          # dynamic part collapsed
+    assert idle["host"] == full["host"]       # host is static
+    assert idle["fan"] == full["fan"]         # fan follows duty, not load
+
+
+def test_heterogeneous_vids_raise_node_power():
+    op = OperatingPoint.green500()
+    best = NodeModel.from_vids([1.1425] * 4)
+    worst = NodeModel.from_vids([1.2] * 4)
+    assert worst.power(op) > best.power(op)
+
+
+# -- recorder / trace ---------------------------------------------------------
+
+def test_recorder_roundtrip_and_component_union():
+    rec = TraceRecorder(source="test")
+    rec.emit(0.0, {"gpu": 100.0}, flops_rate=10.0, util=1.0)
+    rec.emit(1.0, {"gpu": 100.0, "fan": 20.0}, flops_rate=10.0, util=1.0)
+    rec.emit(2.0, {"gpu": 50.0, "fan": 20.0}, flops_rate=5.0, util=0.5)
+    tr = rec.trace()
+    assert isinstance(tr, PowerTrace)
+    assert set(tr.components) == {"gpu", "fan"}
+    assert tr.components["fan"][0] == 0.0      # missing component reads 0
+    assert tr.meta["source"] == "test"
+    assert tr.duration == pytest.approx(2.0)
+    # energy = ∫P dt: totals are [100, 120, 70] W at t = [0, 1, 2]
+    assert tr.energy_j() == pytest.approx(110.0 + 95.0)
+    assert tr.aux["util"][-1] == pytest.approx(0.5)
+
+
+def test_recorder_fixed_interval_resampling():
+    rec = TraceRecorder(dt_s=0.5)
+    rec.emit(0.0, {"chip": 100.0})
+    rec.emit(2.0, {"chip": 300.0})
+    tr = rec.trace()
+    assert np.allclose(np.diff(tr.t), 0.5)     # RAPS-style fixed interval
+    assert tr.components["chip"][1] == pytest.approx(150.0)
+    assert tr.meta["dt_s"] == 0.5
+
+
+def test_recorder_empty_raises():
+    with pytest.raises(ValueError):
+        TraceRecorder().trace()
+
+
+def test_trace_network_excluded_from_compute_power():
+    tr = PowerTrace.from_arrays([0.0, 1.0], [100.0, 100.0], [1.0, 1.0],
+                                network_w=7.0)
+    assert np.allclose(tr.power_w, 100.0)
+    assert tr.network_w == pytest.approx(7.0)
+    assert tr.avg_power(include_network=True) == pytest.approx(107.0)
+    assert tr.avg_power(include_network=False) == pytest.approx(100.0)
+
+
+def test_trace_scaled():
+    tr = PowerTrace.from_arrays([0.0, 1.0], [100.0, 100.0], [5.0, 5.0])
+    big = tr.scaled(56.0)
+    assert np.allclose(big.power_w, 5600.0)
+    assert big.total_flops() == pytest.approx(tr.total_flops() * 56)
+
+
+# -- simulate(): synthetic and replay modes -----------------------------------
+
+def _small_cluster() -> ClusterModel:
+    return lcsc_cluster(8, nodes_per_rack=4, network_w=40.0)
+
+
+def test_simulate_synthetic_hpl_shape():
+    op = OperatingPoint.green500()
+    tr = simulate(SyntheticHPL(duration_s=600.0), op,
+                  cluster=_small_cluster(), dt_s=10.0)
+    p = tr.power_w
+    assert p[0] == pytest.approx(p[len(p) // 2], rel=1e-6)  # flat core
+    assert p[-1] < 0.8 * p[0]                  # trailing-matrix tail
+    assert tr.meta["n_nodes"] == 8
+    assert tr.meta["operating_point"]["f_mhz"] == 774.0
+    # telemetry carries util/clock/temp series (RAPS-style)
+    for key in ("util", "f_mhz", "temp_c", "fan"):
+        assert key in tr.aux
+    assert np.all(np.diff(tr.aux["util"]) <= 1e-12)   # load only decays
+
+
+def test_simulate_constant_load_is_flat():
+    tr = simulate(ConstantLoad(duration_s=100.0, level=1.0),
+                  cluster=_small_cluster(), dt_s=10.0)
+    assert np.ptp(tr.power_w) < 1e-9
+
+
+def test_replay_mode_reproduces_synthetic_trace():
+    """Record a synthetic run, replay its utilization series: the replay
+    trace must reproduce the original power trajectory."""
+    op = OperatingPoint.green500()
+    cl = _small_cluster()
+    original = simulate(SyntheticHPL(duration_s=600.0), op, cluster=cl,
+                        dt_s=10.0)
+    replay = ReplayWorkload.from_trace(original, key="util")
+    again = simulate(replay, op, cluster=cl, dt_s=10.0)
+    np.testing.assert_allclose(again.power_w, original.power_w, rtol=1e-6)
+
+
+def test_replay_missing_series_raises():
+    tr = PowerTrace.from_arrays([0.0, 1.0], [1.0, 1.0], [0.0, 0.0])
+    with pytest.raises(KeyError):
+        ReplayWorkload.from_trace(tr)
+
+
+def test_simulate_honors_caller_supplied_empty_recorder():
+    """An empty recorder is falsy (__len__ == 0) but still the caller's
+    bus — simulate must emit into it, keeping its dt_s/source."""
+    rec = TraceRecorder(dt_s=25.0, source="mine")
+    tr = simulate(ConstantLoad(duration_s=100.0), cluster=_small_cluster(),
+                  dt_s=10.0, recorder=rec)
+    assert len(rec) > 0
+    assert tr.meta["source"] == "mine"
+    assert np.allclose(np.diff(tr.t), 25.0)    # caller's grid, not dt_s
+
+
+def test_solver_energy_phases_stack_on_shared_recorder():
+    """Two solves on one bus append sequentially; each report's energy is
+    its own phase and the bus totals the sum."""
+    from repro.core.energy.solver_energy import solver_energy
+    rec = TraceRecorder(source="solves")
+    r1 = solver_energy("a", 4 ** 4, 10, recorder=rec)
+    r2 = solver_energy("b", 4 ** 4, 30, recorder=rec)
+    assert len(rec) == 4
+    assert r2.trace.t[-1] == pytest.approx(r1.time_s + r2.time_s)
+    assert r1.energy_j == pytest.approx(r1.time_s * 275.0)
+    assert r2.energy_j == pytest.approx(r2.time_s * 275.0)
+    assert rec.trace().energy_j() == pytest.approx(
+        r1.energy_j + r2.energy_j)
