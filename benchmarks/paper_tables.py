@@ -41,7 +41,7 @@ def table1_nodes() -> List[Row]:
 # -- Fig 1a: DGEMM / HPL performance vs voltage -------------------------------
 
 def fig1a_perf_vs_voltage() -> List[Row]:
-    from repro.core.energy.power_model import V_MAX, V_MIN
+    from repro.power.model import V_MAX, V_MIN
     from repro.core.energy.throttle import dgemm_perf_gflops, hpl_node_perf
     rows: List[Row] = []
     for v in np.linspace(V_MIN, V_MAX, 5):
@@ -66,8 +66,7 @@ def fig1a_perf_vs_voltage() -> List[Row]:
 # -- Fig 1b: power vs fan / voltage / temperature -----------------------------
 
 def fig1b_power() -> List[Row]:
-    from repro.core.energy.power_model import (V_MIN, fan_power, gpu_power,
-                                               node_power)
+    from repro.power import V_MIN, fan_power, gpu_power, node_power
     rows: List[Row] = []
     for s in (0.2, 0.4, 0.6, 0.8, 1.0):
         rows.append((f"fig1b/fan={s:.1f}", 0.0, f"W={fan_power(s):.1f}"))
@@ -124,8 +123,8 @@ def hpl_modes() -> List[Row]:
 def green500_levels() -> List[Row]:
     from repro.core.energy import (level1_exploit, linpack_power_trace,
                                    measure_efficiency)
-    from repro.core.energy.green500 import (extrapolation_error,
-                                            node_efficiencies)
+    from repro.power.green500 import (extrapolation_error,
+                                     node_efficiencies)
     rows: List[Row] = []
     tr = linpack_power_trace(56, 1021.0, 5384.0, duration_s=1800.0)
     for lvl in (1, 2, 3):
@@ -208,7 +207,7 @@ def cluster_power_trace() -> List[Row]:
 # -- §4: final result ---------------------------------------------------------
 
 def result_efficiency() -> List[Row]:
-    from repro.core.energy.power_model import V_MIN, node_power
+    from repro.power import V_MIN, node_power
     from repro.core.energy.throttle import (HPL_GPU_UTIL,
                                             gpu_power_throttled,
                                             hpl_node_perf)
@@ -293,7 +292,7 @@ def autotune_operating_point() -> List[Row]:
     voltage ID, 40% fan duty, efficiency-mode HPL blocking — from the
     calibrated power/throttle models alone, within tolerance."""
     from repro.autotune import (NB_EFFICIENCY, tune_operating_point)
-    from repro.core.energy.power_model import V_MIN
+    from repro.power.model import V_MIN
 
     t0 = time.time()
     res = tune_operating_point()                  # exhaustive analytic grid
@@ -326,6 +325,85 @@ def autotune_operating_point() -> List[Row]:
     rows.append(("autotune/coordinate_descent", cd_us,
                  f"evals={cd.evaluations};grid_evals={res.evaluations};"
                  f"same_point={cd.best.point == best}"))
+    return rows
+
+
+# -- §1–2: the Workload API + power-aware cluster scheduler -------------------
+
+def cluster_schedule() -> List[Row]:
+    """The paper operates L-CSC as a *cluster*: independent lattices
+    packed one-per-GPU, multi-node HPL paced by its slowest node, every
+    placement judged by MFLOPS/W.  The scheduled batch must reproduce
+    the published cluster power (57.2 kW within 2%) by *composition* —
+    scheduler placements driven through the PR-3 power layers — and
+    chip-local packing must beat naive round-robin sharding on MFLOPS/W
+    at the 774 MHz optimum."""
+    from repro.cluster import (ClusterTopology, HPLWorkload, Job,
+                               LQCDSolveWorkload, ServeWorkload,
+                               SyntheticWorkload, TrainWorkload, run)
+    from repro.power import OperatingPoint, PowerTrace
+
+    rows: List[Row] = []
+
+    # every workload adapter runs through cluster.run() and returns a
+    # WorkloadResult carrying a PowerTrace from the telemetry bus
+    adapters = [HPLWorkload(), LQCDSolveWorkload(), TrainWorkload(),
+                ServeWorkload(), SyntheticWorkload()]
+    t0 = time.time()
+    mixed = run(adapters, topology=ClusterTopology(n_nodes=2), dt_s=60.0)
+    mixed_us = (time.time() - t0) * 1e6
+    assert len(mixed.results) == len(adapters)
+    assert all(isinstance(r.power_trace, PowerTrace)
+               for r in mixed.results)
+    assert all(r.energy_j > 0 for r in mixed.results)
+    rows.append(("cluster/adapters", mixed_us,
+                 "kinds=" + "+".join(r.kind for r in mixed.results)))
+
+    # the Green500 batch: one lattice-sized job per GPU on the 56-node
+    # run topology, chip-local packing at the published operating point
+    top = ClusterTopology(n_nodes=56)
+    op = OperatingPoint.green500()
+    jobs = [Job(f"lat{i}", 13.0, 1800.0) for i in range(top.n_chips)]
+    t0 = time.time()
+    packed = run(jobs, policy="packed", topology=top, op=op, dt_s=30.0)
+    packed_us = (time.time() - t0) * 1e6
+    assert all(not p.sharded for p in packed.schedule.placements)
+    p_core = float(np.mean(packed.trace.power_w))
+    assert abs(p_core - 57.2e3) / 57.2e3 < 0.02      # 57.2 kW by composition
+    eff_packed = packed.efficiency(3).mflops_per_w
+
+    # naive baseline: shard everything node-wide, pay the ~20% penalty
+    rr = run(jobs, policy="round_robin", topology=top, op=op, dt_s=30.0)
+    assert all(p.sharded for p in rr.schedule.placements)
+    eff_rr = rr.efficiency(3).mflops_per_w
+    assert eff_packed > eff_rr                       # packing wins MFLOPS/W
+    assert rr.makespan > packed.makespan             # and wall-clock
+
+    # the 774 MHz operating point beats stock 900 MHz on efficiency
+    stock = run(jobs, policy="packed", topology=top,
+                op=OperatingPoint(f_mhz=900.0), dt_s=30.0)
+    eff_stock = stock.efficiency(3).mflops_per_w
+    assert eff_packed > eff_stock
+
+    # a cluster power cap is met by derating down the DPM ladder; the
+    # cap covers wall power including the switches
+    capped = run(jobs, policy="packed", topology=top, op=op, dt_s=30.0,
+                 power_cap_w=50e3)
+    assert capped.schedule.derated and capped.op.f_mhz < op.f_mhz
+    assert float(np.max(capped.trace.power_w)) \
+        + capped.trace.network_w <= 50e3
+
+    rows.append(("cluster/packed_56", packed_us,
+                 f"kw={p_core/1000:.2f};paper=57.2;"
+                 f"mflops_w={eff_packed:.1f};makespan={packed.makespan:.0f}"))
+    rows.append(("cluster/round_robin_56", 0.0,
+                 f"mflops_w={eff_rr:.1f};makespan={rr.makespan:.0f};"
+                 f"packed_gain={eff_packed / eff_rr - 1:.1%}"))
+    rows.append(("cluster/op_774_vs_900", 0.0,
+                 f"eff774={eff_packed:.1f};eff900={eff_stock:.1f}"))
+    rows.append(("cluster/power_cap_50kw", 0.0,
+                 f"f_mhz={capped.op.f_mhz:.0f};"
+                 f"kw={float(np.max(capped.trace.power_w))/1000:.2f}"))
     return rows
 
 

@@ -8,7 +8,7 @@ exits non-zero, so CI can gate on ``FAILED:`` without parsing the CSV
 
 Usage::
 
-    python -m benchmarks.run [--only SUBSTR]
+    python -m benchmarks.run [--only SUBSTR] [--list]
 """
 from __future__ import annotations
 
@@ -31,6 +31,7 @@ def benches():
         paper_tables.dslash_bw,
         paper_tables.autotune_operating_point,
         paper_tables.cg_energy_to_solution,
+        paper_tables.cluster_schedule,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,
         kernel_bench.attention_bench,
@@ -41,7 +42,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="",
                     help="run only benches whose name contains SUBSTR")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered bench names (the values --only "
+                         "filters against) and exit")
     args = ap.parse_args(argv)
+
+    if args.list:
+        for b in benches():
+            print(b.__name__)
+        return
 
     selected = [b for b in benches() if args.only in b.__name__]
     if not selected:

@@ -1,0 +1,58 @@
+"""Unified Workload API + power-aware cluster scheduler.
+
+The layer above the power engine: every workload entry point in the repo
+(HPL, LQCD solves, train/serve drivers, synthetic loads) is normalized
+behind one :class:`Workload` protocol, placed by a RAPS-style scheduler
+onto the 160-node / 4-GPU L-CSC topology, and merged into a single
+cluster-level :class:`repro.power.PowerTrace`:
+
+  :mod:`repro.cluster.workload`   Workload protocol, registry, adapters
+  :mod:`repro.cluster.scheduler`  Job/Chip/Placement, topologies,
+                                  policies, power-cap enforcement,
+                                  straggler models
+  :mod:`repro.cluster.run`        ``run(jobs, policy) → ClusterRunResult``
+
+Quick use::
+
+    from repro.cluster import HPLWorkload, LQCDSolveWorkload, run
+    res = run([HPLWorkload(), LQCDSolveWorkload()], policy="packed")
+    res.trace.avg_power()      # merged cluster watts through the PR-3 bus
+    res.efficiency(3)          # Green500 L3 over the merged trace
+
+The pre-power-bus job model (``repro.core.energy.scheduler``) is a
+deprecated shim over :mod:`repro.cluster.scheduler`.
+"""
+from repro.cluster.scheduler import (  # noqa: F401
+    GREEN500_TOPOLOGY,
+    L_CSC_TOPOLOGY,
+    Chip,
+    ClusterTopology,
+    Job,
+    Placement,
+    PowerCapError,
+    Schedule,
+    Scheduler,
+    SchedulingError,
+    drop_slowest_pod,
+    expected_slowdown,
+    frequency_floor_mitigation,
+    makespan,
+    schedule_throughput,
+    straggler_step_time,
+    synchronous_rate,
+    with_perf_floor,
+)
+from repro.cluster.workload import (  # noqa: F401
+    WORKLOAD_REGISTRY,
+    HPLWorkload,
+    LQCDSolveWorkload,
+    ServeWorkload,
+    SyntheticWorkload,
+    TrainWorkload,
+    Workload,
+    WorkloadResult,
+    list_workloads,
+    make_workload,
+    register_workload,
+)
+from repro.cluster.run import ClusterRunResult, run  # noqa: F401

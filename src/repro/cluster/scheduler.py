@@ -1,0 +1,366 @@
+"""Power-aware cluster scheduler (paper §1–2), RAPS-style.
+
+Absorbs the pre-power-bus job model that lived in
+``repro.core.energy.scheduler`` (shimmed there now) and grows it into a
+topology-aware scheduler the Workload API feeds:
+
+  * "run most lattices on a single GPU; use all four GPUs of a node for
+    independent lattices" — the ``packed`` policy prefers chip-local
+    placement and only shards a job when it exceeds single-chip memory,
+    keeping the shards on as few nodes as possible and charging the
+    published ~20% multi-GPU penalty;
+  * "multi-node HPL distributes work evenly, so the slowest node dictates
+    performance" — sharded jobs advance at synchronous-step pace,
+    ``n_chips × min(perf_scale)``, not the optimistic sum;
+  * a cluster power cap is enforced by derating the operating point down
+    the S9150's DPM ladder (the autotuner's discrete frequency states)
+    until the full-load cluster draw fits — the paper's own mechanism
+    for staying inside the facility budget.
+
+The legacy straggler-mitigation helpers (frequency flooring, pod
+dropping) ride along unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.lcsc_lqcd import (GREEN500_SWITCH_POWER_W,
+                                     MULTI_GPU_SLOWDOWN)
+from repro.power.model import OperatingPoint
+
+
+class SchedulingError(ValueError):
+    """A job batch cannot be placed on the topology at all."""
+
+
+class PowerCapError(SchedulingError):
+    """No supported operating point fits the requested power cap."""
+
+
+@dataclass(frozen=True)
+class Job:
+    """One schedulable unit of work — the normalized spec every
+    :class:`repro.cluster.workload.Workload` adapter emits.
+
+    ``work_units`` is relative wall-clock on one reference chip at the
+    reference operating point; ``preferred_op`` lets a workload ask for
+    its own operating point (the scheduler may still derate it to meet a
+    cluster power cap)."""
+
+    name: str
+    mem_gb: float
+    work_units: float
+    shardable: bool = True
+    preferred_op: Optional[OperatingPoint] = None
+    kind: str = "generic"
+
+
+@dataclass
+class Chip:
+    chip_id: int
+    mem_gb: float
+    perf_scale: float = 1.0      # chip-to-chip variation
+    busy_until: float = 0.0
+    node_id: int = 0
+
+
+@dataclass
+class Placement:
+    job: Job
+    chips: List[int]
+    start: float
+    end: float
+    sharded: bool
+    nodes: Tuple[int, ...] = ()
+    rate_per_chip: float = 1.0   # effective work rate per chip (ref = 1.0)
+
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    """The machine the scheduler places onto: L-CSC is 160 nodes of
+    4×S9150 (16 GB each); the Green500 run used a 56-node subset.
+    ``network_w`` is the separately-metered switch draw (paper §3:
+    257 W), charged at the wall whatever the nodes do."""
+
+    n_nodes: int = 160
+    gpus_per_node: int = 4
+    gpu_mem_gb: float = 16.0
+    perf_scales: Optional[Tuple[float, ...]] = None   # per chip, else 1.0
+    network_w: float = GREEN500_SWITCH_POWER_W
+
+    @property
+    def n_chips(self) -> int:
+        return self.n_nodes * self.gpus_per_node
+
+    @property
+    def node_mem_gb(self) -> float:
+        return self.gpus_per_node * self.gpu_mem_gb
+
+    def chips(self) -> List[Chip]:
+        scales = self.perf_scales or (1.0,) * self.n_chips
+        if len(scales) != self.n_chips:
+            raise ValueError(f"need {self.n_chips} perf scales, got "
+                             f"{len(scales)}")
+        return [Chip(i, self.gpu_mem_gb, float(scales[i]),
+                     node_id=i // self.gpus_per_node)
+                for i in range(self.n_chips)]
+
+
+GREEN500_TOPOLOGY = ClusterTopology(n_nodes=56)
+L_CSC_TOPOLOGY = ClusterTopology(n_nodes=160)
+
+
+@dataclass
+class Schedule:
+    """The scheduler's output: placements plus the operating point the
+    batch actually runs at (possibly derated to meet the power cap)."""
+
+    placements: List[Placement]
+    op: OperatingPoint
+    topology: ClusterTopology
+    derated: bool = False
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def makespan(self) -> float:
+        return max((p.end for p in self.placements), default=0.0)
+
+    def active_chips(self, t: float) -> Dict[int, Placement]:
+        """chip_id → placement running on it at time ``t``."""
+        out: Dict[int, Placement] = {}
+        for p in self.placements:
+            if p.start <= t < p.end:
+                for c in p.chips:
+                    out[c] = p
+        return out
+
+
+def synchronous_rate(perf_scales: Sequence[float],
+                     penalty: float = MULTI_GPU_SLOWDOWN) -> float:
+    """Aggregate work rate of a sharded job: every synchronous step is
+    paced by the slowest shard, so the pool delivers
+    ``n × min(perf) × (1 − penalty)`` — not the sum of its chips."""
+    scales = list(perf_scales)
+    if len(scales) == 1:
+        return scales[0]
+    return len(scales) * min(scales) * (1.0 - penalty)
+
+
+def _commit_placement(job: Job, pool: List[Chip],
+                      penalty: float) -> Placement:
+    """Book ``job`` onto ``pool``: earliest common start, synchronous-step
+    pacing, busy_until advanced on every chip.  The one placement
+    definition both the Scheduler and the legacy flat API use."""
+    start = max(c.busy_until for c in pool)
+    rate = synchronous_rate([c.perf_scale for c in pool], penalty)
+    dur = job.work_units / rate
+    for c in pool:
+        c.busy_until = start + dur
+    return Placement(job, [c.chip_id for c in pool], start, start + dur,
+                     len(pool) > 1,
+                     nodes=tuple(sorted({c.node_id for c in pool})),
+                     rate_per_chip=rate / len(pool))
+
+
+class Scheduler:
+    """Greedy list scheduler over a :class:`ClusterTopology`.
+
+    Policies:
+      * ``packed`` — chip-local packing: single-chip placement unless the
+        job's memory demands sharding; shards stay on the fewest nodes.
+      * ``round_robin`` — the naive baseline: every shardable job is
+        spread over one node's worth of GPUs, striped round-robin across
+        nodes, always paying the multi-GPU penalty.
+    """
+
+    POLICIES = ("packed", "round_robin")
+
+    def __init__(self, topology: Optional[ClusterTopology] = None, *,
+                 policy: str = "packed",
+                 multi_gpu_penalty: float = MULTI_GPU_SLOWDOWN,
+                 power_cap_w: Optional[float] = None):
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {self.POLICIES}")
+        self.topology = topology or GREEN500_TOPOLOGY
+        self.policy = policy
+        self.penalty = multi_gpu_penalty
+        self.power_cap_w = power_cap_w
+
+    # -- power cap ---------------------------------------------------------
+
+    def resolve_operating_point(self, op: Optional[OperatingPoint] = None,
+                                ) -> Tuple[OperatingPoint, bool]:
+        """Derate ``op`` down the S9150 DPM ladder until the full-load
+        cluster draw fits the cap.  Returns (op, derated)."""
+        op = op or OperatingPoint.green500()
+        if self.power_cap_w is None:
+            return op, False
+        from repro.autotune.space import S9150_DPM_STATES_MHZ
+        # the requested clock itself, then every DPM state below it (an
+        # op already under the lowest state has nowhere left to derate)
+        ladder = sorted({op.f_mhz}
+                        | {f for f in S9150_DPM_STATES_MHZ if f < op.f_mhz},
+                        reverse=True)
+        for f in ladder:
+            cand = op.replace(f_mhz=float(f))
+            if self._full_load_power(cand) <= self.power_cap_w:
+                return cand, f != op.f_mhz
+        floor = self._full_load_power(op.replace(f_mhz=float(ladder[-1])))
+        raise PowerCapError(
+            f"power cap {self.power_cap_w:.0f} W infeasible: the lowest "
+            f"reachable clock ({ladder[-1]:.0f} MHz) still draws "
+            f"{floor:.0f} W at full load on {self.topology.n_nodes} nodes")
+
+    def _full_load_power(self, op: OperatingPoint) -> float:
+        """Worst-case wall draw the cap is checked against: every node at
+        full load, plus the switches (they count at the wall too)."""
+        from repro.power.layers import NodeModel
+        return NodeModel().power(op) * self.topology.n_nodes \
+            + self.topology.network_w
+
+    # -- placement ---------------------------------------------------------
+
+    def schedule(self, jobs: Sequence[Job], *,
+                 op: Optional[OperatingPoint] = None) -> Schedule:
+        op, derated = self.resolve_operating_point(op)
+        chips = self.topology.chips()
+        placements: List[Placement] = []
+        for job in sorted(jobs, key=lambda j: -j.work_units):
+            placements.append(self._place(job, chips))
+        return Schedule(placements, op, self.topology, derated=derated)
+
+    def _chips_needed(self, job: Job) -> int:
+        need = max(1, math.ceil(job.mem_gb / self.topology.gpu_mem_gb))
+        if need > 1 and not job.shardable:
+            raise SchedulingError(
+                f"job {job.name!r} needs {job.mem_gb:.1f} GB but is not "
+                f"shardable (chip memory {self.topology.gpu_mem_gb:.0f} GB)")
+        if need > self.topology.gpus_per_node:
+            raise SchedulingError(
+                f"job {job.name!r} needs {job.mem_gb:.1f} GB — more than a "
+                f"node's total GPU memory "
+                f"({self.topology.node_mem_gb:.0f} GB); cross-node lattice "
+                f"sharding is not supported (paper: lattices stay within "
+                f"one node)")
+        if self.policy == "round_robin" and job.shardable:
+            # the naive baseline shards everything node-wide
+            need = self.topology.gpus_per_node
+        return need
+
+    def _pick_pool(self, need: int, chips: List[Chip]) -> List[Chip]:
+        if need == 1:
+            return [min(chips, key=lambda c: (c.busy_until, c.chip_id))]
+        if self.policy == "packed":
+            # chip-local: the node whose ``need`` earliest-free chips free
+            # up soonest keeps the shards together
+            best: Optional[List[Chip]] = None
+            best_t = math.inf
+            by_node: Dict[int, List[Chip]] = {}
+            for c in chips:
+                by_node.setdefault(c.node_id, []).append(c)
+            for node_chips in by_node.values():
+                if len(node_chips) < need:
+                    continue
+                pool = sorted(node_chips,
+                              key=lambda c: (c.busy_until, c.chip_id))[:need]
+                t = max(c.busy_until for c in pool)
+                if t < best_t:
+                    best, best_t = pool, t
+            assert best is not None   # need ≤ gpus_per_node is pre-checked
+            return best
+        # round_robin: stripe across nodes by raw chip order, earliest-free
+        return sorted(chips, key=lambda c: (c.busy_until, c.chip_id))[:need]
+
+    def _place(self, job: Job, chips: List[Chip]) -> Placement:
+        pool = self._pick_pool(self._chips_needed(job), chips)
+        return _commit_placement(job, pool, self.penalty)
+
+
+# ---------------------------------------------------------------------------
+# Legacy flat API (the pre-Workload call sites; core/energy/scheduler.py
+# re-exports these)
+# ---------------------------------------------------------------------------
+
+
+def schedule_throughput(jobs: Sequence[Job], chips: List[Chip],
+                        *, multi_gpu_penalty: float = MULTI_GPU_SLOWDOWN,
+                        ) -> List[Placement]:
+    """Greedy list scheduler over an explicit chip list: single-chip
+    placement unless the job's memory demands sharding; sharded jobs take
+    ceil(mem/chip_mem) chips at synchronous-step pace with the published
+    ~20% penalty."""
+    placements: List[Placement] = []
+    for job in sorted(jobs, key=lambda j: -j.work_units):
+        need = max(1, math.ceil(job.mem_gb / chips[0].mem_gb))
+        pool = sorted(chips, key=lambda c: (c.busy_until, c.chip_id))[:need]
+        placements.append(_commit_placement(job, pool, multi_gpu_penalty))
+    return placements
+
+
+def makespan(placements: Sequence[Placement]) -> float:
+    return max(p.end for p in placements) if placements else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Synchronous-step straggler model
+# ---------------------------------------------------------------------------
+
+def straggler_step_time(base_step_s: float, perf_scales: Sequence[float],
+                        ) -> float:
+    """Synchronous SPMD: the slowest participant gates every step."""
+    return base_step_s / min(perf_scales)
+
+
+def expected_slowdown(n_chips: int, sigma: float,
+                      rng: Optional[np.random.Generator] = None,
+                      trials: int = 256) -> float:
+    """E[min perf] over a population with relative spread sigma — how much
+    a 1000+ chip job loses to manufacturing spread without mitigation."""
+    rng = rng or np.random.default_rng(0)
+    mins = rng.normal(1.0, sigma, size=(trials, n_chips)).min(axis=1)
+    return float(1.0 / np.clip(mins, 1e-3, None).mean())
+
+
+def frequency_floor_mitigation(perf_scales: Sequence[float],
+                               ) -> Tuple[float, float]:
+    """The paper's fix: clock every chip at the slowest chip's sustainable
+    rate → no oscillation, flat profile.  Returns (uniform scale, gain vs
+    unmitigated oscillating population)."""
+    floor = min(perf_scales)
+    # oscillating chips lose an extra 8% (throttle.OSC_PENALTY)
+    unmitigated = min(p * (1 - 0.08 * (p < 1.0)) for p in perf_scales)
+    return floor, floor / unmitigated - 1.0
+
+
+def drop_slowest_pod(pod_perf: Dict[str, float], threshold: float = 0.93,
+                     ) -> Tuple[List[str], float]:
+    """Elastic mitigation: drop a pod whose perf is below threshold x median
+    if the remaining aggregate throughput improves (synchronous scaling:
+    throughput = n_pods x min(perf))."""
+    names = list(pod_perf)
+    perfs = np.array([pod_perf[n] for n in names])
+    full = len(perfs) * perfs.min()
+    best_names, best = names, full
+    med = float(np.median(perfs))
+    for i, n in enumerate(names):
+        if perfs[i] < threshold * med:
+            rest = np.delete(perfs, i)
+            alt = len(rest) * rest.min()
+            if alt > best:
+                best, best_names = alt, [m for j, m in enumerate(names)
+                                         if j != i]
+    return best_names, best / full - 1.0
+
+
+def with_perf_floor(topology: ClusterTopology) -> ClusterTopology:
+    """Frequency-floor mitigation applied to a heterogeneous topology:
+    every chip paced at the slowest chip's rate (flat-774-style)."""
+    if topology.perf_scales is None:
+        return topology
+    floor = min(topology.perf_scales)
+    return replace(topology, perf_scales=(floor,) * topology.n_chips)

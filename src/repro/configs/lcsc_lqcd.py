@@ -27,6 +27,17 @@ class LatticeConfig:
             v *= s
         return v
 
+    @property
+    def mem_gb(self) -> float:
+        """Solver working-set estimate for the Workload/Job spec: gauge
+        field (4 links × 18 reals/site) plus ~16 spinor-field streams
+        (x, r, p, Ap, even/odd halves, defect vectors) at 24 reals/site.
+        Thermal lattices fit on one GPU; cold (large-T) lattices are what
+        force multi-GPU sharding (paper §1)."""
+        real_bytes = 4 if self.dtype == "float32" else 8
+        reals_per_site = 4 * 18 + 16 * 24
+        return self.volume * reals_per_site * real_bytes / 1e9
+
 
 # Solver presets: the seed's plain full-lattice CGNE, and the paper's
 # CL2QCD strategy (even-odd + reduced-precision inner CG).

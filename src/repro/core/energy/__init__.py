@@ -1,31 +1,35 @@
 """Energy core — legacy façade over the unified power engine.
 
 Power models, throttle simulation, DVFS planning, Green500 measurement
-methodology, chip variability and cluster scheduling.  The power/energy
-implementation now lives in :mod:`repro.power`; this package keeps the
-pre-refactor import surface working (plus the DVFS planner and the
-scheduler, which remain here)."""
-from repro.core.energy.power_model import (  # noqa: F401
-    NodePowerModel,
+methodology and chip variability.  The power/energy implementation lives
+in :mod:`repro.power`, the scheduler in :mod:`repro.cluster`; this
+package keeps the pre-refactor import surface working (plus the DVFS
+planner and the throttle perf curves, which remain here).
+
+The re-exports below pull from the real homes directly so that importing
+this package — or its still-native submodules ``dvfs``/``throttle``/
+``solver_energy`` — does not trip the :class:`DeprecationWarning` that
+the ``power_model``/``green500``/``scheduler`` shim modules emit."""
+from repro.power.model import (  # noqa: F401
     S9150,
     fan_power,
     gpu_power,
-    node_power,
     voltage_at,
 )
+from repro.power.layers import NodePowerModel, node_power  # noqa: F401
 from repro.core.energy.throttle import (  # noqa: F401
     dgemm_perf_gflops,
     hpl_node_perf,
     sustained_frequency,
 )
 from repro.core.energy.dvfs import FreqPlan, plan_frequency  # noqa: F401
-from repro.core.energy.green500 import (  # noqa: F401
+from repro.power.green500 import (  # noqa: F401
     LinpackTrace,
-    PowerTrace,
     level1_exploit,
     linpack_power_trace,
     measure_efficiency,
 )
+from repro.power.trace import PowerTrace  # noqa: F401
 from repro.core.energy.solver_energy import (  # noqa: F401
     S9150_HW,
     SolverEnergyReport,

@@ -6,7 +6,14 @@ the unified :class:`repro.power.PowerTrace` telemetry type (the old
 This module re-exports the pre-refactor names so existing imports keep
 working.
 """
-from repro.power.green500 import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.energy.green500 is deprecated; import from "
+    "repro.power.green500 (the unified power-telemetry engine) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.power.green500 import (  # noqa: E402,F401
     LEVEL_MIN_FRACTION,
     LinpackTrace,
     MeasurementResult,
@@ -18,4 +25,4 @@ from repro.power.green500 import (  # noqa: F401
     node_efficiencies,
     select_median_nodes,
 )
-from repro.power.trace import PowerTrace  # noqa: F401
+from repro.power.trace import PowerTrace  # noqa: E402,F401

@@ -7,7 +7,14 @@ fans + PSU-efficiency curve) in ``repro.power.layers``.  This module
 re-exports the pre-refactor names so existing imports keep working —
 no constant is defined here.
 """
-from repro.power.model import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.energy.power_model is deprecated; import from repro.power "
+    "(repro.power.model / repro.power.layers) instead",
+    DeprecationWarning, stacklevel=2)
+
+from repro.power.model import (  # noqa: E402,F401
     EFFICIENT_MHZ,
     FAN_BASE_W,
     FAN_CUBIC_W,
@@ -33,7 +40,7 @@ from repro.power.model import (  # noqa: F401
     tpu_chip_power,
     voltage_at,
 )
-from repro.power.layers import (  # noqa: F401
+from repro.power.layers import (  # noqa: E402,F401
     P_HOST_DC_W,
     NodeModel,
     NodePowerModel,

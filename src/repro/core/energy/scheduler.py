@@ -1,122 +1,27 @@
-"""Cluster scheduling & straggler model (paper §1–2).
+"""Deprecated import path for the cluster scheduler.
 
-Two paper observations become framework features:
-  * "run most lattices on a single GPU; use all four GPUs of a node for
-    independent lattices" — a throughput scheduler that prefers chip-local
-    jobs and only shards a job when it exceeds single-chip memory
-    (charging the published ~20% multi-GPU penalty);
-  * "multi-node HPL distributes work evenly, so the slowest node dictates
-    performance" — a synchronous-step straggler model with mitigation by
-    frequency flooring (the flat-774 result) or dropping the slow pod.
+The job model and scheduler now live in :mod:`repro.cluster.scheduler`,
+co-designed with the unified Workload API (``repro.cluster``): the same
+``Job``/``Chip``/``Placement`` types, topology-aware policies, power-cap
+enforcement and the straggler models.  This module re-exports the
+pre-refactor names so existing imports keep working.
 """
-from __future__ import annotations
+import warnings
 
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+warnings.warn(
+    "repro.core.energy.scheduler is deprecated; import from "
+    "repro.cluster.scheduler (the power-aware cluster scheduler behind "
+    "the unified Workload API) instead",
+    DeprecationWarning, stacklevel=2)
 
-import numpy as np
-
-from repro.configs.lcsc_lqcd import MULTI_GPU_SLOWDOWN
-
-
-@dataclass(frozen=True)
-class Job:
-    name: str
-    mem_gb: float
-    work_units: float            # relative wall-clock on one reference chip
-
-
-@dataclass
-class Chip:
-    chip_id: int
-    mem_gb: float
-    perf_scale: float = 1.0      # chip-to-chip variation
-    busy_until: float = 0.0
-
-
-@dataclass
-class Placement:
-    job: Job
-    chips: List[int]
-    start: float
-    end: float
-    sharded: bool
-
-
-def schedule_throughput(jobs: Sequence[Job], chips: List[Chip],
-                        *, multi_gpu_penalty: float = MULTI_GPU_SLOWDOWN,
-                        ) -> List[Placement]:
-    """Greedy list scheduler: single-chip placement unless the job's memory
-    demands sharding; sharded jobs take ceil(mem/chip_mem) chips and run at
-    (1 - penalty) efficiency (paper: ~20% for >1 GPU lattices)."""
-    placements: List[Placement] = []
-    for job in sorted(jobs, key=lambda j: -j.work_units):
-        need = max(1, math.ceil(job.mem_gb / chips[0].mem_gb))
-        pool = sorted(chips, key=lambda c: c.busy_until)[:need]
-        start = max(c.busy_until for c in pool)
-        if need == 1:
-            dur = job.work_units / pool[0].perf_scale
-        else:
-            agg = sum(c.perf_scale for c in pool) * (1 - multi_gpu_penalty)
-            dur = job.work_units / agg
-        for c in pool:
-            c.busy_until = start + dur
-        placements.append(Placement(job, [c.chip_id for c in pool], start,
-                                    start + dur, need > 1))
-    return placements
-
-
-def makespan(placements: Sequence[Placement]) -> float:
-    return max(p.end for p in placements) if placements else 0.0
-
-
-# ---------------------------------------------------------------------------
-# Synchronous-step straggler model
-# ---------------------------------------------------------------------------
-
-def straggler_step_time(base_step_s: float, perf_scales: Sequence[float],
-                        ) -> float:
-    """Synchronous SPMD: the slowest participant gates every step."""
-    return base_step_s / min(perf_scales)
-
-
-def expected_slowdown(n_chips: int, sigma: float,
-                      rng: Optional[np.random.Generator] = None,
-                      trials: int = 256) -> float:
-    """E[min perf] over a population with relative spread sigma — how much
-    a 1000+ chip job loses to manufacturing spread without mitigation."""
-    rng = rng or np.random.default_rng(0)
-    mins = rng.normal(1.0, sigma, size=(trials, n_chips)).min(axis=1)
-    return float(1.0 / np.clip(mins, 1e-3, None).mean())
-
-
-def frequency_floor_mitigation(perf_scales: Sequence[float],
-                               ) -> Tuple[float, float]:
-    """The paper's fix: clock every chip at the slowest chip's sustainable
-    rate → no oscillation, flat profile.  Returns (uniform scale, gain vs
-    unmitigated oscillating population)."""
-    floor = min(perf_scales)
-    # oscillating chips lose an extra 8% (throttle.OSC_PENALTY)
-    unmitigated = min(p * (1 - 0.08 * (p < 1.0)) for p in perf_scales)
-    return floor, floor / unmitigated - 1.0
-
-
-def drop_slowest_pod(pod_perf: Dict[str, float], threshold: float = 0.93,
-                     ) -> Tuple[List[str], float]:
-    """Elastic mitigation: drop a pod whose perf is below threshold x median
-    if the remaining aggregate throughput improves (synchronous scaling:
-    throughput = n_pods x min(perf))."""
-    names = list(pod_perf)
-    perfs = np.array([pod_perf[n] for n in names])
-    full = len(perfs) * perfs.min()
-    best_names, best = names, full
-    med = float(np.median(perfs))
-    for i, n in enumerate(names):
-        if perfs[i] < threshold * med:
-            rest = np.delete(perfs, i)
-            alt = len(rest) * rest.min()
-            if alt > best:
-                best, best_names = alt, [m for j, m in enumerate(names)
-                                         if j != i]
-    return best_names, best / full - 1.0
+from repro.cluster.scheduler import (  # noqa: E402,F401
+    Chip,
+    Job,
+    Placement,
+    drop_slowest_pod,
+    expected_slowdown,
+    frequency_floor_mitigation,
+    makespan,
+    schedule_throughput,
+    straggler_step_time,
+)

@@ -47,13 +47,15 @@ def linpack_residual(a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray) -> float:
 
 
 def linpack_run(cfg: HPLConfig, *, energy: Optional[EnergyConfig] = None,
-                tuned: bool = False) -> LinpackResult:
+                tuned: bool = False,
+                recorder: Optional[TraceRecorder] = None) -> LinpackResult:
     """Factor + solve + HPL residual + (optional) energy plan.
 
     ``tuned=True`` swaps ``cfg``'s blocking for the autotune-cache
     winner at this problem size (see ``HPLConfig.tuned``) before
     running — the efficiency-mode replacement for the hard-coded block
-    constants."""
+    constants.  A shared ``recorder`` stacks this run's telemetry after
+    anything already on the bus (the Workload API's merged-trace path)."""
     if tuned:
         cfg = cfg.tuned()
     key = jax.random.PRNGKey(cfg.seed)
@@ -90,9 +92,12 @@ def linpack_run(cfg: HPLConfig, *, energy: Optional[EnergyConfig] = None,
                 "energy_per_run_j": fp.energy_per_step_j,
                 "perf_loss": fp.perf_loss, "dominant": fp.dominant}
         # emit the run into the telemetry bus: chip power at the planned
-        # operating point over the measured wall time
-        rec = TraceRecorder(source="hpl.linpack")
-        for t in (0.0, wall):
+        # operating point over the measured wall time (appended after any
+        # earlier phases when the caller shares a bus)
+        rec = recorder if recorder is not None \
+            else TraceRecorder(source="hpl.linpack")
+        t0 = rec.t_last
+        for t in (t0, t0 + wall):
             rec.emit(t, {"chip": fp.power_w},
                      flops_rate=useful / wall / 1e9,
                      freq_scale=fp.freq_scale, util=1.0)

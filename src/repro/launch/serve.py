@@ -12,13 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import (ARCH_IDS, EnergyConfig, ShapeConfig, get_arch)
-from repro.core.energy.dvfs import plan_frequency
+from repro.cluster.workload import ServeWorkload
+from repro.config import ARCH_IDS, get_arch
 from repro.models.frontend import enc_len_for
 from repro.power.trace import TraceRecorder
-from repro.roofline.analytic import cost_for
 from repro.runtime.steps import make_decode_step, make_prefill_step
-from repro.config import SINGLE_POD_MESH
 
 
 def main() -> None:
@@ -56,16 +54,14 @@ def main() -> None:
         cfg, quantize_kv_cache=args.kv_int8))
     decode = jax.jit(make_decode_step(cfg))
 
-    # energy plan (decode is memory-bound -> deep clock derate, paper C5)
-    shape = ShapeConfig("serve", total, B, "decode")
-    ac = cost_for(cfg, shape, SINGLE_POD_MESH, kv_int8=args.kv_int8)
-    # prefill-shape cost for the prefill telemetry sample (ac is the
-    # per-decode-step cost)
-    ac_prefill = cost_for(cfg, ShapeConfig("serve_prefill", S, B, "prefill"),
-                          SINGLE_POD_MESH, kv_int8=args.kv_int8)
-    plan = plan_frequency(ac.compute_s, ac.memory_s, ac.collective_s,
-                          flops_per_step=ac.flops,
-                          cfg=EnergyConfig(mode="efficiency"))
+    # energy plan (decode is memory-bound -> deep clock derate, paper C5),
+    # built through the unified Workload adapter (repro.cluster) so the
+    # driver and the cluster scheduler share one definition; ac is the
+    # per-decode-step cost, ac_prefill the prefill-shape cost
+    workload = ServeWorkload(arch=args.arch, batch=B, prompt_len=S,
+                             gen=args.gen, smoke=args.smoke,
+                             kv_int8=args.kv_int8)
+    plan, ac_prefill, ac = workload.energy_plan()
     print(f"[energy] decode dominant={plan.dominant} "
           f"freq={plan.freq_scale:.2f} power={plan.power_w:.0f}W")
     # telemetry bus: prefill + every decoded token emit chip samples

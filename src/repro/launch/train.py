@@ -17,17 +17,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
-from repro.config import (ARCH_IDS, EnergyConfig, ShapeConfig, TrainConfig,
-                          get_arch)
-from repro.core.energy.dvfs import plan_frequency
+from repro.cluster.workload import TrainWorkload
+from repro.config import ARCH_IDS, ShapeConfig, TrainConfig, get_arch
 from repro.data import make_batch_iterator
 from repro.distributed.fault import FaultPolicy, FaultTolerantLoop
 from repro.models import init_params
 from repro.optim import adamw_init
 from repro.power.trace import TraceRecorder
-from repro.roofline.analytic import cost_for
 from repro.runtime.steps import make_train_step
-from repro.config import SINGLE_POD_MESH
 
 
 def main() -> None:
@@ -58,11 +55,13 @@ def main() -> None:
     ckpt = CheckpointManager(Path(args.ckpt_dir) / cfg.name)
     loop = FaultTolerantLoop(FaultPolicy(checkpoint_every=args.ckpt_every))
 
-    # energy plan for this step shape (paper C5): roofline-coupled clock
-    ac = cost_for(cfg, shape, SINGLE_POD_MESH, tc)
-    plan = plan_frequency(ac.compute_s, ac.memory_s, ac.collective_s,
-                          flops_per_step=ac.flops,
-                          cfg=EnergyConfig(mode="efficiency"))
+    # energy plan for this step shape (paper C5): roofline-coupled clock,
+    # built through the unified Workload adapter (repro.cluster) so the
+    # driver and the cluster scheduler share one definition
+    workload = TrainWorkload(arch=args.arch, steps=args.steps,
+                             batch=args.batch, seq=args.seq,
+                             smoke=args.smoke)
+    plan, ac = workload.energy_plan()
     print(f"[energy] dominant={plan.dominant} freq={plan.freq_scale:.2f} "
           f"power={plan.power_w:.0f}W perf_loss={plan.perf_loss:.3%}")
 

@@ -140,6 +140,9 @@ def simulate(workload: Workload,
     # still the caller's bus
     rec = recorder if recorder is not None \
         else TraceRecorder(dt_s=dt_s, source="power.simulate")
+    # a shared bus may carry earlier phases: stack after its latest
+    # sample (the convention every emitter on the bus follows)
+    t0 = rec.t_last
     cluster_gflops = float(sum(node_hpl_gflops(op, n)
                                for n in cluster.nodes))
     for t in np.arange(0.0, workload.duration_s + dt_s, dt_s):
@@ -147,7 +150,7 @@ def simulate(workload: Workload,
                              0.0, 1.0))
         fan = min(op.fan, fan_curve(load)) if adaptive_fan else op.fan
         watts = cluster.component_watts(op, load=load, fan=fan)
-        rec.emit(t, watts, flops_rate=cluster_gflops * load,
+        rec.emit(t0 + t, watts, flops_rate=cluster_gflops * load,
                  util=op.gpu_util() * load, f_mhz=op.f_mhz,
                  fan=fan, temp_c=op.temperature())
     trace = rec.trace()

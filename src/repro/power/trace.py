@@ -81,8 +81,15 @@ class PowerTrace:
     def duration(self) -> float:
         return float(self.t[-1] - self.t[0])
 
-    def total_flops(self) -> float:
-        return float(trapezoid(self.flops_rate, self.t))
+    def total_flops(self, t0: Optional[float] = None,
+                    t1: Optional[float] = None) -> float:
+        """∫flops_rate dt — over [t0, t1] when given, else the whole
+        trace (the flops counterpart of :meth:`energy_j`)."""
+        if t0 is None and t1 is None:
+            return float(trapezoid(self.flops_rate, self.t))
+        t0 = float(self.t[0]) if t0 is None else t0
+        t1 = float(self.t[-1]) if t1 is None else t1
+        return self._window_integral(self.flops_rate, t0, t1)
 
     def _window_integral(self, y: np.ndarray, t0: float, t1: float) -> float:
         """∫y dt over [t0, t1], linearly interpolating at the window edges

@@ -1,0 +1,343 @@
+"""Tests for the unified Workload API + power-aware cluster scheduler
+(``repro.cluster``): adapter normalization, placement policies,
+synchronous-step straggler pacing, power-cap enforcement, the merged
+cluster trace, and the deprecation shims."""
+import importlib
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.cluster import (Chip, ClusterTopology, HPLWorkload, Job,
+                           LQCDSolveWorkload, PowerCapError, Scheduler,
+                           SchedulingError, ServeWorkload,
+                           SyntheticWorkload, TrainWorkload, WorkloadResult,
+                           list_workloads, make_workload, run,
+                           schedule_throughput, synchronous_rate,
+                           with_perf_floor)
+from repro.power.model import OperatingPoint
+from repro.power.trace import PowerTrace
+
+
+# -- Workload registry + adapters --------------------------------------------
+
+def test_registry_lists_all_five_adapters():
+    # superset: future adapters (e.g. serve-traffic replay) may register
+    assert set(list_workloads()) >= {"hpl", "lqcd", "serve", "synthetic",
+                                     "train"}
+
+
+def test_make_workload_by_name_and_unknown():
+    wl = make_workload("synthetic")
+    assert wl.job().kind == "synthetic"
+    with pytest.raises(KeyError, match="unknown workload"):
+        make_workload("quantum")
+
+
+def test_every_adapter_normalizes_to_a_job():
+    for kind in list_workloads():
+        job = make_workload(kind).job()
+        assert isinstance(job, Job)
+        assert job.mem_gb > 0 and job.work_units >= 0
+        assert job.kind == kind
+
+
+@pytest.mark.parametrize("kind", ["train", "serve", "synthetic"])
+def test_analytic_adapters_execute_to_result_with_trace(kind):
+    res = make_workload(kind).execute(OperatingPoint.green500())
+    assert isinstance(res, WorkloadResult)
+    assert isinstance(res.power_trace, PowerTrace)
+    assert res.energy_j > 0 and res.wall_s > 0 and res.perf_gflops > 0
+
+
+def test_lqcd_adapter_runs_real_solve():
+    res = LQCDSolveWorkload().execute(OperatingPoint.green500())
+    assert res.details["converged"]
+    assert res.details["rel_residual"] <= 1e-5
+    assert isinstance(res.power_trace, PowerTrace)
+
+
+def test_hpl_adapter_runs_real_lu():
+    from repro.configs.hpl import HPLConfig
+    res = HPLWorkload(cfg=HPLConfig(n=96, block=32)).execute(
+        OperatingPoint.green500())
+    assert res.details["passed"]
+    assert res.perf_gflops > 0
+    assert isinstance(res.power_trace, PowerTrace)
+
+
+def test_lattice_mem_gb_scales_with_volume():
+    from repro.configs.lcsc_lqcd import COLD_LATTICE, THERMAL_LATTICE
+    assert COLD_LATTICE.mem_gb == pytest.approx(
+        8 * THERMAL_LATTICE.mem_gb)
+    # thermal lattices fit on one S9150; that is the paper's whole point
+    assert THERMAL_LATTICE.mem_gb < 16.0
+
+
+# -- Scheduler: topology, policies, pacing -----------------------------------
+
+def test_topology_chips_carry_node_ids():
+    top = ClusterTopology(n_nodes=3, gpus_per_node=4)
+    chips = top.chips()
+    assert len(chips) == 12
+    assert [c.node_id for c in chips[:5]] == [0, 0, 0, 0, 1]
+
+
+def test_packed_prefers_single_chip_and_chip_local_shards():
+    top = ClusterTopology(n_nodes=2)
+    s = Scheduler(top, policy="packed")
+    sch = s.schedule([Job(f"lat{i}", 13.0, 1.0) for i in range(8)])
+    assert all(not p.sharded for p in sch.placements)
+    assert sch.makespan == pytest.approx(1.0)
+    # a 2-chip shard stays on one node
+    sh = s.schedule([Job("cold", 30.0, 1.0)]).placements[0]
+    assert sh.sharded and len(sh.nodes) == 1
+
+
+def test_round_robin_shards_node_wide_and_loses():
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"lat{i}", 13.0, 1.0) for i in range(8)]
+    packed = Scheduler(top, policy="packed").schedule(jobs)
+    rr = Scheduler(top, policy="round_robin").schedule(jobs)
+    assert all(p.sharded for p in rr.placements)
+    assert rr.makespan > packed.makespan
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        Scheduler(policy="steal")
+
+
+def test_job_larger_than_node_memory_is_a_clean_error():
+    with pytest.raises(SchedulingError, match="more than a node's total"):
+        Scheduler(ClusterTopology(n_nodes=4)).schedule(
+            [Job("huge", 100.0, 1.0)])
+
+
+def test_unshardable_job_larger_than_chip_is_a_clean_error():
+    with pytest.raises(SchedulingError, match="not .*shardable"):
+        Scheduler().schedule([Job("pinned", 20.0, 1.0, shardable=False)])
+
+
+def test_empty_job_list_schedules_cleanly():
+    sch = Scheduler().schedule([])
+    assert sch.placements == [] and sch.makespan == 0.0
+    with pytest.raises(ValueError, match="empty workload batch"):
+        run([])
+
+
+def test_straggler_pacing_heterogeneous_perf():
+    # synchronous steps: the slowest shard gates the pool
+    assert synchronous_rate([1.0, 0.5], penalty=0.2) == pytest.approx(0.8)
+    top = ClusterTopology(n_nodes=1, perf_scales=(1.0, 0.5, 1.0, 1.0))
+    pl = Scheduler(top).schedule([Job("cold", 32.0, 1.0)]).placements[0]
+    assert pl.sharded and len(pl.chips) == 2
+    # NOT the optimistic sum (1.5×0.8 → 0.833s); min-paced → 1.25s
+    assert pl.end - pl.start == pytest.approx(1.0 / (2 * 0.5 * 0.8))
+
+
+def test_perf_floor_mitigation_flattens_topology():
+    top = ClusterTopology(n_nodes=1, perf_scales=(1.0, 0.9, 1.0, 1.0))
+    flat = with_perf_floor(top)
+    assert set(flat.perf_scales) == {0.9}
+    assert with_perf_floor(ClusterTopology(n_nodes=1)).perf_scales is None
+
+
+# -- Power cap ---------------------------------------------------------------
+
+def test_power_cap_derates_down_the_dpm_ladder():
+    top = ClusterTopology(n_nodes=56)
+    op, derated = Scheduler(top, power_cap_w=50e3).resolve_operating_point(
+        OperatingPoint.green500())
+    assert derated and op.f_mhz < 774.0
+    op2, d2 = Scheduler(top, power_cap_w=60e3).resolve_operating_point(
+        OperatingPoint.green500())
+    assert not d2 and op2.f_mhz == 774.0
+
+
+def test_power_cap_infeasible_raises():
+    with pytest.raises(PowerCapError, match="infeasible"):
+        Scheduler(ClusterTopology(n_nodes=56),
+                  power_cap_w=1e3).resolve_operating_point()
+
+
+def test_power_cap_covers_switch_power():
+    # a cap that the nodes alone meet but nodes + switches exceed must
+    # still force a derate (the cap is wall power)
+    top = ClusterTopology(n_nodes=56)
+    from repro.power.layers import NodeModel
+    nodes_only = NodeModel().power(OperatingPoint.green500()) * 56
+    op, derated = Scheduler(
+        top, power_cap_w=nodes_only + 10.0).resolve_operating_point(
+        OperatingPoint.green500())
+    assert derated and op.f_mhz < 774.0
+
+
+def test_power_cap_op_below_dpm_floor_is_clean_error():
+    # an op already under the lowest DPM state has nowhere to derate:
+    # still a PowerCapError, never a bare IndexError
+    with pytest.raises(PowerCapError, match="infeasible"):
+        Scheduler(ClusterTopology(n_nodes=56),
+                  power_cap_w=1e3).resolve_operating_point(
+            OperatingPoint(f_mhz=200.0))
+
+
+# -- WorkloadResults respect the shared bus and the operating point ----------
+
+def test_shared_bus_energy_is_windowed_per_workload():
+    from repro.power.trace import TraceRecorder
+    op = OperatingPoint.green500()
+    solo = ServeWorkload().execute(op).energy_j
+    rec = TraceRecorder()
+    TrainWorkload().execute(op, recorder=rec)
+    shared = ServeWorkload().execute(op, recorder=rec)
+    # serve's result must not absorb train's earlier phases on the bus
+    assert shared.energy_j == pytest.approx(solo, rel=1e-6)
+
+
+def test_synthetic_stacks_on_shared_bus():
+    from repro.power.engine import ConstantLoad
+    from repro.power.trace import TraceRecorder
+    op = OperatingPoint.green500()
+    wl = SyntheticWorkload(profile=ConstantLoad(duration_s=100.0))
+    solo = wl.execute(op).energy_j
+    rec = TraceRecorder()
+    TrainWorkload().execute(op, recorder=rec)
+    t_prev = rec.t_last
+    shared = SyntheticWorkload(
+        profile=ConstantLoad(duration_s=100.0)).execute(op, recorder=rec)
+    # simulate() appends after the bus's latest sample (no overlap) and
+    # the result is billed only for its own window
+    assert float(shared.power_trace.t[-1]) >= t_prev + 100.0
+    assert shared.energy_j == pytest.approx(solo, rel=1e-6)
+
+
+def test_lqcd_energy_tracks_operating_point():
+    e_774 = LQCDSolveWorkload().execute(OperatingPoint.green500())
+    e_900 = LQCDSolveWorkload().execute(OperatingPoint(f_mhz=900.0))
+    # derated, undervolted chips draw less; the memory-bound solve time
+    # barely moves (paper: <1.5%)
+    assert e_774.energy_j < e_900.energy_j
+    assert e_774.wall_s == pytest.approx(e_900.wall_s)
+
+
+def test_train_plan_clock_capped_by_operating_point():
+    plan_cap, _ = TrainWorkload().energy_plan(
+        mode="performance", op=OperatingPoint.green500())
+    plan_free, _ = TrainWorkload().energy_plan(mode="performance")
+    assert plan_cap.freq_scale <= 774.0 / 900.0 + 1e-9
+    assert plan_free.freq_scale >= plan_cap.freq_scale
+
+
+def test_train_cost_matches_driver_remat():
+    # launch.train compiles its step with remat="none"; the adapter's
+    # default cost model must describe that step, not a remat'd one
+    assert TrainWorkload().remat == "none"
+    assert TrainWorkload(remat="layer")._cost().flops > \
+        TrainWorkload()._cost().flops
+
+
+# -- The merged cluster trace ------------------------------------------------
+
+def test_merged_trace_composes_node_layers():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job(f"lat{i}", 13.0, 600.0) for i in range(top.n_chips)]
+    res = run(jobs, topology=top, op=OperatingPoint.green500(), dt_s=60.0)
+    # every layer is accounted in the merged trace
+    for comp in ("gpu", "host", "fan", "psu_loss", "network"):
+        assert comp in res.trace.components
+    # full-load compute power == the layered node model × n_nodes
+    from repro.power.layers import NodeModel
+    expect = NodeModel().power(OperatingPoint.green500()) * top.n_nodes
+    assert float(res.trace.power_w[0]) == pytest.approx(expect, rel=1e-6)
+    # Green500 methodology consumes the merged trace directly
+    assert res.efficiency(3).mflops_per_w > 4000
+
+
+def test_merged_trace_ends_at_makespan():
+    # makespan not a multiple of dt_s: no samples (or energy) past it
+    top = ClusterTopology(n_nodes=1)
+    res = run([Job("j", 13.0, 100.0)], topology=top, dt_s=30.0)
+    assert res.makespan == pytest.approx(100.0)
+    assert float(res.trace.t[-1]) == pytest.approx(100.0)
+    # batches shorter than one tick are not padded with idle energy
+    short = run([Job("j", 13.0, 2.0)], topology=top, dt_s=30.0)
+    assert float(short.trace.t[-1]) == pytest.approx(2.0)
+
+
+def test_idle_chips_draw_static_power_only():
+    top = ClusterTopology(n_nodes=2)
+    busy = run([Job(f"j{i}", 13.0, 600.0) for i in range(8)],
+               topology=top, dt_s=60.0)
+    half = run([Job(f"j{i}", 13.0, 600.0) for i in range(4)],
+               topology=top, dt_s=60.0)
+    assert float(half.trace.power_w[0]) < float(busy.trace.power_w[0])
+    # hosts/fans/PSU stay powered either way
+    assert half.trace.components["host"][0] == \
+        busy.trace.components["host"][0]
+
+
+def test_mixed_adapter_batch_through_cluster_run():
+    wls = [TrainWorkload(), ServeWorkload(), SyntheticWorkload()]
+    res = run(wls, topology=ClusterTopology(n_nodes=1), dt_s=60.0)
+    assert [r.kind for r in res.results] == ["train", "serve", "synthetic"]
+    assert all(isinstance(r.power_trace, PowerTrace) for r in res.results)
+    assert res.trace.meta["policy"] == "packed"
+
+
+def test_preferred_op_flows_from_jobs():
+    j = Job("hpl", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=900.0))
+    res = run([j], topology=ClusterTopology(n_nodes=1), dt_s=60.0)
+    assert res.op.f_mhz == 900.0
+
+
+# -- Legacy flat API (the core/energy shim keeps these alive) ----------------
+
+def test_legacy_schedule_throughput_still_works():
+    chips = [Chip(i, 16.0) for i in range(4)]
+    jobs = [Job(f"thermal{i}", 3.0, 1.0) for i in range(8)]
+    pl = schedule_throughput(jobs, chips)
+    assert all(not p.sharded for p in pl)
+    assert max(p.end for p in pl) == pytest.approx(2.0)
+
+
+def test_legacy_positional_job_and_chip():
+    # the pre-refactor call shape: Job(name, mem_gb, work_units)
+    j = Job("x", 3.0, 1.0)
+    assert j.shardable and j.preferred_op is None and j.kind == "generic"
+    c = Chip(0, 16.0)
+    assert c.perf_scale == 1.0 and c.node_id == 0
+
+
+# -- Deprecation shims -------------------------------------------------------
+
+@pytest.mark.parametrize("mod", ["repro.core.energy.scheduler",
+                                 "repro.core.energy.power_model",
+                                 "repro.core.energy.green500"])
+def test_shim_emits_deprecation_warning(mod):
+    sys.modules.pop(mod, None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        importlib.import_module(mod)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught), \
+        f"{mod} did not warn"
+
+
+def test_core_energy_package_import_is_warning_free():
+    for name in [m for m in sys.modules
+                 if m.startswith("repro.core.energy")]:
+        sys.modules.pop(name)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        importlib.import_module("repro.core.energy")
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_scheduler_shim_reexports_cluster_types():
+    import repro.cluster.scheduler as real
+    shim = importlib.import_module("repro.core.energy.scheduler")
+    assert shim.Job is real.Job
+    assert shim.schedule_throughput is real.schedule_throughput
+    assert np.isclose(shim.straggler_step_time(1.0, [1.0, 0.8]), 1.25)
