@@ -407,6 +407,84 @@ def cluster_schedule() -> List[Row]:
     return rows
 
 
+# -- §1: the full L-CSC at scale through the interval-driven engine -----------
+
+def cluster_scale() -> List[Row]:
+    """The production topology, not just the Green500 subset: 160 nodes /
+    640 GPUs with a 1000+-job mixed batch through the vectorized
+    interval-driven merge.  Two gates: (1) *exactness* — on the 56-node
+    Green500 batch the vectorized trace must match the per-tick loop
+    oracle bit-for-bit, with a measured ≥20× wall-time speedup; (2)
+    *scale* — the full machine with 1200 mixed jobs must evaluate in
+    interactive time and still compose the same per-node physics."""
+    from repro.cluster import ClusterTopology, Job, run
+    from repro.cluster.run import (_merged_trace, _merged_trace_reference)
+    from repro.cluster.scheduler import Scheduler
+    from repro.power import OperatingPoint
+    from repro.power.layers import NodeModel
+
+    op = OperatingPoint.green500()
+    rows: List[Row] = []
+
+    # -- 56-node Green500 batch: vectorized vs loop oracle, timed ------------
+    top56 = ClusterTopology(n_nodes=56)
+    jobs56 = [Job(f"lat{i}", 13.0, 1800.0) for i in range(top56.n_chips)]
+    sch56 = Scheduler(top56).schedule(jobs56, op=op)
+    sch56.meta["policy"] = "packed"
+
+    t0 = time.perf_counter()
+    ref = _merged_trace_reference(sch56, dt_s=5.0, network_w=257.0)
+    ref_s = time.perf_counter() - t0
+    vec_s = min(_timed(lambda: _merged_trace(sch56, dt_s=5.0,
+                                             network_w=257.0))
+                for _ in range(3))
+    vec = _merged_trace(sch56, dt_s=5.0, network_w=257.0)
+
+    # sample-for-sample, bit-level: same grid, same watts, same flops
+    assert np.array_equal(vec.t, ref.t)
+    assert sorted(vec.components) == sorted(ref.components)
+    for name in vec.components:
+        assert np.array_equal(vec.components[name], ref.components[name]), \
+            f"vectorized {name} series diverged from the loop oracle"
+    assert np.array_equal(vec.flops_rate, ref.flops_rate)
+    speedup = ref_s / vec_s
+    assert speedup >= 20.0, f"vectorized speedup only {speedup:.1f}x"
+    rows.append(("scale/speedup_56", vec_s * 1e6,
+                 f"loop_s={ref_s:.3f};vector_s={vec_s:.4f};"
+                 f"speedup={speedup:.0f}x;samples={len(vec.t)}"))
+
+    # -- the full 160-node L-CSC with a 1200-job mixed batch -----------------
+    rng = np.random.default_rng(42)
+    top160 = ClusterTopology(n_nodes=160)
+    assert top160.n_chips == 640
+    jobs = [Job(f"j{i}", float(rng.choice([13.0, 13.0, 30.0])),
+                float(rng.uniform(300.0, 2400.0)))
+            for i in range(1200)]
+    t0 = time.perf_counter()
+    res = run(jobs, policy="packed", topology=top160, op=op, dt_s=5.0)
+    full_s = time.perf_counter() - t0
+    assert len(res.schedule.placements) == len(jobs)
+    # every chip is booked from t=0, so the first sample is the whole
+    # machine at full load — the same composed node physics as the
+    # 56-node batch, ×160
+    expect = NodeModel().power(op) * 160
+    assert abs(float(res.trace.power_w[0]) - expect) / expect < 1e-9
+    assert float(res.trace.aux["util"][0]) == 1.0
+    eff = res.efficiency(3).mflops_per_w
+    assert eff > 4000.0
+    rows.append(("scale/lcsc_160", full_s * 1e6,
+                 f"jobs={len(jobs)};kw={float(res.trace.power_w[0])/1e3:.2f};"
+                 f"mflops_w={eff:.1f};makespan={res.makespan:.0f};"
+                 f"samples={len(res.trace.t)};wall_s={full_s:.2f}"))
+    return rows
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 # -- §1: CG energy-to-solution, plain vs even-odd mixed-precision -------------
 
 def cg_energy_to_solution() -> List[Row]:

@@ -6,14 +6,22 @@ machine-readable ``FAILED:<bench_name>:<error>`` line — and the process
 exits non-zero, so CI can gate on ``FAILED:`` without parsing the CSV
 (stdout stays clean CSV either way).
 
+Every table is timed: per-table wall time goes to stderr as
+``TIME:<bench_name>:<seconds>`` lines, and the whole run is summarized
+in a machine-readable JSON file (``--json``, default
+``BENCH_cluster.json``) mapping table → ``{value, seconds}`` — the
+bench-smoke CI job uploads it next to the CSV artifact.
+
 Usage::
 
-    python -m benchmarks.run [--only SUBSTR] [--list]
+    python -m benchmarks.run [--only SUBSTR] [--list] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
 
 
@@ -30,8 +38,9 @@ def benches():
         paper_tables.result_efficiency,
         paper_tables.dslash_bw,
         paper_tables.autotune_operating_point,
-        paper_tables.cg_energy_to_solution,
         paper_tables.cluster_schedule,
+        paper_tables.cluster_scale,
+        paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,
         kernel_bench.attention_bench,
@@ -45,7 +54,16 @@ def main(argv=None) -> None:
     ap.add_argument("--list", action="store_true",
                     help="print registered bench names (the values --only "
                          "filters against) and exit")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable per-table summary "
+                         "(table -> {value, seconds}) here; '' disables. "
+                         "Default: BENCH_cluster.json on full runs, "
+                         "disabled under --only (a partial run must not "
+                         "overwrite the full-suite summary)")
     args = ap.parse_args(argv)
+    json_path = args.json
+    if json_path is None:
+        json_path = "" if args.only else "BENCH_cluster.json"
 
     if args.list:
         for b in benches():
@@ -58,19 +76,36 @@ def main(argv=None) -> None:
         raise SystemExit(2)
 
     print("name,us_per_call,derived", flush=True)
+    report = {}
     failed = []
     for bench in selected:
+        t0 = time.perf_counter()
         try:
             rows = bench()
         except Exception as e:  # noqa: BLE001 — report and keep going
+            secs = time.perf_counter() - t0
             failed.append(bench.__name__)
             traceback.print_exc()
             msg = str(e).split("\n")[0][:200]
             print(f"FAILED:{bench.__name__}:{msg}", file=sys.stderr,
                   flush=True)
+            print(f"TIME:{bench.__name__}:{secs:.3f}", file=sys.stderr,
+                  flush=True)
+            report[bench.__name__] = {"error": msg, "seconds": secs}
             continue
+        secs = time.perf_counter() - t0
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"TIME:{bench.__name__}:{secs:.3f}", file=sys.stderr,
+              flush=True)
+        report[bench.__name__] = {
+            "value": {name: {"us_per_call": us, "derived": derived}
+                      for name, us, derived in rows},
+            "seconds": secs}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
     if failed:
         print(f"FAILED:summary:{len(failed)} benches failed "
               f"({' '.join(failed)})", file=sys.stderr, flush=True)

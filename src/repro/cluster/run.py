@@ -1,12 +1,20 @@
 """The cluster driver: ``run(jobs, policy) → ClusterRunResult``.
 
 Composition, not new physics: the scheduler places the batch on the
-topology, each tick asks the PR-3 power layers for per-node component
-watts given which chips are busy, and everything lands on one
-:class:`TraceRecorder` — so the merged cluster-level
-:class:`repro.power.PowerTrace` feeds the Green500 L1/L2/L3 methodology
-and the paper-table benchmarks exactly like a single-workload trace
-does.
+topology, the power layers report per-node component watts given which
+chips are busy, and everything lands on one :class:`TraceRecorder` — so
+the merged cluster-level :class:`repro.power.PowerTrace` feeds the
+Green500 L1/L2/L3 methodology and the paper-table benchmarks exactly
+like a single-workload trace does.
+
+The hot path is *interval-driven and vectorized* (ExaDigiT/RAPS style):
+placement start/end events decompose the schedule into piecewise-
+constant occupancy intervals, each interval is evaluated once through
+the batched layer API, and the result is broadcast onto the ``dt_s``
+sample grid — no per-tick × per-node × per-chip Python loops, which is
+what makes the full 160-node / 640-GPU L-CSC topology with 1000+ jobs
+tractable.  The original per-tick loop survives as
+:func:`_merged_trace_reference`, the equivalence-test oracle.
 """
 from __future__ import annotations
 
@@ -45,41 +53,132 @@ class ClusterRunResult:
         return measure_efficiency(self.trace, level)
 
 
-def _merged_trace(schedule: Schedule, *, dt_s: float,
-                  network_w: float) -> PowerTrace:
-    """Tick the schedule through the layered node model: busy chips draw
-    dynamic power and produce FLOPS at their placement's effective rate,
-    idle chips draw static power, and hosts/fans/PSU losses are charged
-    whether or not a node is busy (the cluster is powered on)."""
+def _chip_rates(schedule: Schedule):
+    """Per-chip power/rate scaffolding shared by the vectorized engine
+    and the loop oracle: (NodeModel, w_busy, w_idle, chip_peak_gflops)."""
     from repro.power.engine import node_hpl_gflops
     from repro.power.layers import NodeModel
 
+    node = NodeModel()
+    gpu = node.gpus[0]
+    op = schedule.op
+    return (node, gpu.power(op, load=1.0), gpu.power(op, load=0.0),
+            node_hpl_gflops(op, node) / schedule.topology.gpus_per_node)
+
+
+def _sample_grid(span: float, dt_s: float) -> np.ndarray:
+    """Grid over [0, span], ending exactly at the span (the final sample
+    reports the busy state just before it — the left limit — so the
+    trapezoid energy covers the full last interval and nothing after the
+    batch is billed)."""
+    ts = np.arange(0.0, span, dt_s)
+    if not ts.size or ts[-1] < span:
+        ts = np.append(ts, span)
+    return ts
+
+
+def _stamp_cluster_meta(trace: PowerTrace, schedule: Schedule) -> None:
+    op = schedule.op
+    trace.meta.update(
+        n_nodes=schedule.topology.n_nodes,
+        policy=schedule.meta.get("policy", ""),
+        operating_point={"f_mhz": op.f_mhz, "vid": op.vid, "fan": op.fan,
+                         "nb": op.nb, "lookahead": op.lookahead})
+
+
+def _merged_trace(schedule: Schedule, *, dt_s: float,
+                  network_w: float) -> PowerTrace:
+    """Vectorized interval-driven merge: busy chips draw dynamic power
+    and produce FLOPS at their placement's effective rate, idle chips
+    draw static power, and hosts/fans/PSU losses are charged whether or
+    not a node is busy (the cluster is powered on).
+
+    The trace is piecewise-constant between placement start/end events,
+    so each distinct occupancy interval is evaluated **once** through
+    the batched layer API and then broadcast onto the ``dt_s`` grid —
+    sample-for-sample (bit-level) identical to the per-tick loop oracle
+    :func:`_merged_trace_reference`."""
     top = schedule.topology
     op = schedule.op
-    node = NodeModel()
+    node, w_busy, w_idle, chip_peak_gflops = _chip_rates(schedule)
     g = top.gpus_per_node
-    # per-chip watts at this op, busy vs idle (load scales GPU duty)
-    gpu = node.gpus[0]
-    w_busy = gpu.power(op, load=1.0)
-    w_idle = gpu.power(op, load=0.0)
-    chip_peak_gflops = node_hpl_gflops(op, node) / g
+    n_chips = top.n_chips
 
     # a zero-work batch still gets a one-interval idle trace; a short
     # batch ends at its makespan, never padded out to dt_s
     span = schedule.makespan or dt_s
+
+    # -- event decomposition: occupancy is constant between placement
+    #    start/end events, so those times bound the evaluation intervals
+    events = {0.0}
+    live = [p for p in schedule.placements if p.end > p.start]
+    for p in live:
+        events.add(p.start)
+        events.add(p.end)
+    starts = np.array(sorted(e for e in events if 0.0 <= e < span))
+    n_int = starts.shape[0]
+
+    # -- per-chip piecewise-constant occupancy / flops-rate matrices.
+    #    Later placements overwrite earlier ones on a shared chip,
+    #    matching Schedule.active_chips' last-wins dict semantics.
+    active = np.zeros((n_int, n_chips), dtype=bool)
+    rate = np.zeros((n_int, n_chips))
+    for p in live:
+        s = int(np.searchsorted(starts, p.start, side="left"))
+        e = int(np.searchsorted(starts, p.end, side="left"))
+        active[s:e, p.chips] = True
+        rate[s:e, p.chips] = chip_peak_gflops * p.rate_per_chip
+
+    # -- one batched layer evaluation per interval: per-node GPU DC draw
+    #    (summed over the chip axis exactly like the scalar API sums its
+    #    per-chip overrides), then the node composition elementwise
+    chip_w = np.where(active, w_busy, w_idle)
+    gpu_dc = np.sum(chip_w.reshape(n_int, top.n_nodes, g), axis=2)
+    per_node = node.component_watts_series(op, gpu_dc=gpu_dc)
+    watts_int = {name: np.sum(w, axis=1) for name, w in per_node.items()}
+    flops_int = np.sum(rate, axis=1)
+    util_int = np.sum(active, axis=1) / n_chips
+
+    # -- broadcast onto the dt_s grid: each sample reads the interval it
+    #    falls in (the final sample at t == span reads the left limit)
+    ts = _sample_grid(span, dt_s)
+    idx = np.searchsorted(starts, np.minimum(ts, span - 1e-9),
+                          side="right") - 1
+    idx = np.clip(idx, 0, n_int - 1)
+
     rec = TraceRecorder(source="cluster.run")
-    # grid over [0, makespan], ending exactly at the makespan (the final
-    # sample reports the busy state just before it — the left limit — so
-    # the trapezoid energy covers the full last interval and nothing
-    # after the batch is billed)
-    ts = np.arange(0.0, span, dt_s)
-    if not ts.size or ts[-1] < span:
-        ts = np.append(ts, span)
-    for t in ts:
+    watts = {name: w[idx] for name, w in watts_int.items()}
+    watts["network"] = np.full(ts.shape, float(network_w))
+    rec.emit_series(ts, watts, flops_rate=flops_int[idx],
+                    util=util_int[idx], f_mhz=op.f_mhz, fan=op.fan)
+    trace = rec.trace()
+    _stamp_cluster_meta(trace, schedule)
+    return trace
+
+
+def _merged_trace_reference(schedule: Schedule, *, dt_s: float,
+                            network_w: float) -> PowerTrace:
+    """The legacy per-tick ``ticks × nodes × chips`` Python loop over the
+    *scalar* layer API — kept as the equivalence-test oracle for the
+    vectorized engine (and as the baseline the measured speedup in
+    ``benchmarks/paper_tables.py::cluster_scale`` is taken against).
+
+    Per-tick values are accumulated into per-node/per-chip arrays and
+    reduced with ``np.sum`` so the float association matches the
+    vectorized engine's axis reductions bit-for-bit."""
+    top = schedule.topology
+    op = schedule.op
+    node, w_busy, w_idle, chip_peak_gflops = _chip_rates(schedule)
+    g = top.gpus_per_node
+
+    span = schedule.makespan or dt_s
+    rec = TraceRecorder(source="cluster.run")
+    for t in _sample_grid(span, dt_s):
         active = schedule.active_chips(min(t, span - 1e-9))
-        watts: Dict[str, float] = {"gpu": 0.0, "host": 0.0, "fan": 0.0,
-                                   "psu_loss": 0.0, "network": network_w}
-        flops = 0.0
+        per_node: Dict[str, np.ndarray] = {
+            name: np.zeros(top.n_nodes)
+            for name in ("gpu", "host", "fan", "psu_loss")}
+        f_chip = np.zeros(top.n_chips)
         busy = 0
         for n in range(top.n_nodes):
             overrides = []
@@ -87,18 +186,17 @@ def _merged_trace(schedule: Schedule, *, dt_s: float,
                 p = active.get(c)
                 overrides.append(w_busy if p is not None else w_idle)
                 if p is not None:
-                    flops += chip_peak_gflops * p.rate_per_chip
+                    f_chip[c] = chip_peak_gflops * p.rate_per_chip
                     busy += 1
             for name, w in node.component_watts(
                     op, gpu_w_override=overrides).items():
-                watts[name] += w
-        rec.emit(t, watts, flops_rate=flops,
+                per_node[name][n] = w
+        watts = {name: float(np.sum(col)) for name, col in per_node.items()}
+        watts["network"] = network_w
+        rec.emit(t, watts, flops_rate=float(np.sum(f_chip)),
                  util=busy / top.n_chips, f_mhz=op.f_mhz, fan=op.fan)
     trace = rec.trace()
-    trace.meta.update(
-        n_nodes=top.n_nodes, policy=schedule.meta.get("policy", ""),
-        operating_point={"f_mhz": op.f_mhz, "vid": op.vid, "fan": op.fan,
-                         "nb": op.nb, "lookahead": op.lookahead})
+    _stamp_cluster_meta(trace, schedule)
     return trace
 
 

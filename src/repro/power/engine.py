@@ -127,12 +127,14 @@ def simulate(workload: Workload,
              recorder: Optional[TraceRecorder] = None) -> PowerTrace:
     """Run ``workload`` on ``cluster`` at ``op`` and return the telemetry.
 
-    Each tick queries the workload's relative load, derives the fan duty
-    (load-adaptive derating below the set point when ``adaptive_fan``,
-    the paper's end-of-run fan curve) and asks every layer of the
-    cluster model for component watts.  FLOPS rate scales with load from
-    the node perf model, so Green500 efficiency figures come straight
-    off the returned :class:`PowerTrace`.
+    The workload's relative load is sampled on the tick grid, the fan
+    duty derives from it (load-adaptive derating below the set point
+    when ``adaptive_fan``, the paper's end-of-run fan curve), and the
+    whole series is evaluated in one pass through the batched layer API
+    (``ClusterModel.component_watts_series``) — per-sample results are
+    identical to ticking the scalar layers.  FLOPS rate scales with
+    load from the node perf model, so Green500 efficiency figures come
+    straight off the returned :class:`PowerTrace`.
     """
     op = op or OperatingPoint.green500()
     cluster = cluster or lcsc_cluster()
@@ -145,14 +147,15 @@ def simulate(workload: Workload,
     t0 = rec.t_last
     cluster_gflops = float(sum(node_hpl_gflops(op, n)
                                for n in cluster.nodes))
-    for t in np.arange(0.0, workload.duration_s + dt_s, dt_s):
-        load = float(np.clip(workload.load(min(t, workload.duration_s)),
-                             0.0, 1.0))
-        fan = min(op.fan, fan_curve(load)) if adaptive_fan else op.fan
-        watts = cluster.component_watts(op, load=load, fan=fan)
-        rec.emit(t0 + t, watts, flops_rate=cluster_gflops * load,
-                 util=op.gpu_util() * load, f_mhz=op.f_mhz,
-                 fan=fan, temp_c=op.temperature())
+    ts = np.arange(0.0, workload.duration_s + dt_s, dt_s)
+    loads = np.clip([workload.load(min(float(t), workload.duration_s))
+                     for t in ts], 0.0, 1.0)
+    fans = np.minimum(op.fan, fan_curve(loads)) if adaptive_fan \
+        else np.full(ts.shape, op.fan)
+    watts = cluster.component_watts_series(op, load=loads, fan=fans)
+    rec.emit_series(t0 + ts, watts, flops_rate=cluster_gflops * loads,
+                    util=op.gpu_util() * loads, f_mhz=op.f_mhz,
+                    fan=fans, temp_c=op.temperature())
     trace = rec.trace()
     trace.meta.setdefault("n_nodes", cluster.n_nodes)
     trace.meta.setdefault("operating_point", {

@@ -55,14 +55,17 @@ class PSUCurve:
     load_peak: float = PSU_LOAD_PEAK
     curvature: float = PSU_EFF_CURVATURE
 
-    def efficiency(self, dc_w: float) -> float:
-        load = float(np.clip(dc_w / self.rated_w, 0.02, 1.2))
-        return self.eff_peak - self.curvature * (load - self.load_peak) ** 2
+    def efficiency(self, dc_w):
+        """η(load) — array-aware: a DC-draw series maps elementwise."""
+        load = np.clip(np.asarray(dc_w, dtype=float) / self.rated_w,
+                       0.02, 1.2)
+        eff = self.eff_peak - self.curvature * (load - self.load_peak) ** 2
+        return float(eff) if np.ndim(dc_w) == 0 else eff
 
-    def wall_power(self, dc_w: float) -> float:
+    def wall_power(self, dc_w):
         return dc_w / self.efficiency(dc_w)
 
-    def loss_w(self, dc_w: float) -> float:
+    def loss_w(self, dc_w):
         return self.wall_power(dc_w) - dc_w
 
 
@@ -88,6 +91,19 @@ class GPUModel:
                                    temp_c=op.temperature(),
                                    util=op.gpu_util() * load,
                                    tdp_w=self.spec.tdp_w)
+
+    def power_batch(self, op: OperatingPoint, *, load) -> np.ndarray:
+        """Vectorized :meth:`power`: an array of duty-cycle loads maps
+        elementwise to board watts (same model, one ufunc pass)."""
+        return gpu_power_throttled(op.f_mhz, self.vid,
+                                   temp_c=op.temperature(),
+                                   util=op.gpu_util()
+                                   * np.asarray(load, dtype=float),
+                                   tdp_w=self.spec.tdp_w)
+
+    def component_watts_batch(self, op: OperatingPoint, *,
+                              load) -> Dict[str, np.ndarray]:
+        return {"gpu": self.power_batch(op, load=load)}
 
     def unconstrained_power(self, op: OperatingPoint, *,
                             load: float = 1.0) -> float:
@@ -122,15 +138,58 @@ class NodeModel:
                         fan: Optional[float] = None,
                         gpu_w_override: Optional[Sequence[float]] = None,
                         ) -> Dict[str, float]:
+        gpu_dc = None if gpu_w_override is None \
+            else float(np.sum(gpu_w_override))
+        watts = self.component_watts_series(op, load=load, fan=fan,
+                                            gpu_dc=gpu_dc)
+        return {k: float(v) for k, v in watts.items()}
+
+    def component_watts_series(self, op: OperatingPoint, *, load=1.0,
+                               fan=None, gpu_dc=None,
+                               ) -> Dict[str, np.ndarray]:
+        """Batched :meth:`component_watts` over a *time series*: ``load``
+        and/or ``fan`` may be arrays (one entry per sample) and every
+        returned component is an array of the common broadcast shape.
+        ``gpu_dc`` short-circuits the GPU model with a precomputed DC
+        draw per sample (the occupancy engine's path)."""
         duty = op.fan if fan is None else fan
-        if gpu_w_override is not None:
-            gpu_dc = float(np.sum(gpu_w_override))
-        else:
-            gpu_dc = float(sum(g.power(op, load=load) for g in self.gpus))
+        if gpu_dc is None:
+            gpu_dc = 0.0
+            for g in self.gpus:
+                gpu_dc = gpu_dc + g.power_batch(op, load=load)
         fan_dc = fan_power(duty)
         dc = self.host_dc_w + gpu_dc + fan_dc
-        return {"gpu": gpu_dc, "host": self.host_dc_w, "fan": fan_dc,
-                "psu_loss": self.psu.loss_w(dc)}
+        shape = np.shape(dc)
+
+        def full(v):
+            return np.broadcast_to(np.asarray(v, dtype=float), shape).copy()
+
+        return {"gpu": full(gpu_dc), "host": full(self.host_dc_w),
+                "fan": full(fan_dc), "psu_loss": full(self.psu.loss_w(dc))}
+
+    def component_watts_batch(self, op: OperatingPoint, busy_counts, *,
+                              fan=None) -> Dict[str, np.ndarray]:
+        """Batched :meth:`component_watts` over *occupancy*: an integer
+        array of busy-chip counts (0 … ``len(self.gpus)``) maps to
+        per-sample component watts.  Each distinct count is evaluated
+        once through the scalar GPU model (a ``len(gpus)+1``-entry
+        lookup table) and broadcast.  Assumes a homogeneous chip
+        population (``gpus[0]`` binds the bin).  NOTE: the cluster
+        engine itself sums per-chip watts in chip order and hands the
+        result to :meth:`component_watts_series` via ``gpu_dc`` — the
+        lookup table here adds busy chips first, which may differ in
+        the last ulp for mixed orderings, so this convenience entry
+        point must not replace the engine's chip-order sum."""
+        g = len(self.gpus)
+        counts = np.asarray(busy_counts, dtype=np.intp)
+        if counts.size and (counts.min() < 0 or counts.max() > g):
+            raise ValueError(f"busy counts must lie in [0, {g}]")
+        w_busy = self.gpus[0].power(op, load=1.0)
+        w_idle = self.gpus[0].power(op, load=0.0)
+        table = np.array([float(np.sum([w_busy] * b + [w_idle] * (g - b)))
+                          for b in range(g + 1)])
+        return self.component_watts_series(op, fan=fan,
+                                           gpu_dc=table[counts])
 
     def power(self, op: OperatingPoint, *, load: float = 1.0,
               fan: Optional[float] = None,
@@ -147,10 +206,17 @@ class RackModel:
 
     def component_watts(self, op: OperatingPoint, *, load: float = 1.0,
                         fan: Optional[float] = None) -> Dict[str, float]:
-        total: Dict[str, float] = {}
+        return {k: float(v) for k, v in self.component_watts_series(
+            op, load=load, fan=fan).items()}
+
+    def component_watts_series(self, op: OperatingPoint, *, load=1.0,
+                               fan=None) -> Dict[str, np.ndarray]:
+        """Batched :meth:`component_watts` over a load/fan time series
+        (the scalar API is a thin wrapper over this path)."""
+        total: Dict[str, np.ndarray] = {}
         for node in self.nodes:
-            for name, w in node.component_watts(op, load=load,
-                                                fan=fan).items():
+            for name, w in node.component_watts_series(op, load=load,
+                                                       fan=fan).items():
                 total[name] = total.get(name, 0.0) + w
         return total
 
@@ -178,13 +244,27 @@ class ClusterModel:
     def component_watts(self, op: OperatingPoint, *, load: float = 1.0,
                         fan: Optional[float] = None,
                         include_network: bool = True) -> Dict[str, float]:
-        total: Dict[str, float] = {}
+        return {k: float(v) for k, v in self.component_watts_series(
+            op, load=load, fan=fan,
+            include_network=include_network).items()}
+
+    def component_watts_series(self, op: OperatingPoint, *, load=1.0,
+                               fan=None, include_network: bool = True,
+                               ) -> Dict[str, np.ndarray]:
+        """Batched :meth:`component_watts` over a load/fan time series —
+        what the vectorized :func:`repro.power.engine.simulate` drives
+        (the scalar API is a thin wrapper over this path)."""
+        total: Dict[str, np.ndarray] = {}
         for rack in self.racks:
-            for name, w in rack.component_watts(op, load=load,
-                                                fan=fan).items():
+            for name, w in rack.component_watts_series(op, load=load,
+                                                       fan=fan).items():
                 total[name] = total.get(name, 0.0) + w
         if include_network:
-            total["network"] = self.network_w
+            shape = np.shape(next(iter(total.values()))) if total \
+                else np.broadcast(np.asarray(load, dtype=float),
+                                  np.asarray(op.fan if fan is None else fan,
+                                             dtype=float)).shape
+            total["network"] = np.full(shape, self.network_w)
         return total
 
     def power(self, op: OperatingPoint, *, load: float = 1.0,

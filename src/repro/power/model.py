@@ -92,10 +92,12 @@ def gpu_power(f_mhz: float, vid_900: float, *, temp_c: float = 55.0,
         f_mhz / 1000.0, v, util)
 
 
-def fan_power(speed: float) -> float:
-    """Node fan power vs duty cycle in [0, 1] (cubic — Fig. 1b shape)."""
-    s = float(np.clip(speed, 0.0, 1.0))
-    return FAN_BASE_W + FAN_CUBIC_W * s ** 3
+def fan_power(speed):
+    """Node fan power vs duty cycle in [0, 1] (cubic — Fig. 1b shape).
+    Array-aware: an ndarray of duties returns an ndarray of watts."""
+    s = np.clip(speed, 0.0, 1.0)
+    p = FAN_BASE_W + FAN_CUBIC_W * s ** 3
+    return float(p) if np.ndim(speed) == 0 else p
 
 
 def sample_vids(rng: np.random.Generator, n: int) -> np.ndarray:
@@ -125,13 +127,17 @@ def sustained_frequency(f_set_mhz: float, vid_900: float, *,
 
 
 def gpu_power_throttled(f_set_mhz: float, vid_900: float, *,
-                        temp_c: float = 55.0, util: float = 1.0,
-                        tdp_w: float = S9150.tdp_w) -> float:
-    """Actual draw: TDP when throttling, model power otherwise."""
+                        temp_c: float = 55.0, util=1.0,
+                        tdp_w: float = S9150.tdp_w):
+    """Actual draw: TDP when throttling, model power otherwise.
+    Array-aware over ``util`` (the batched layer entry points hand a
+    whole duty-cycle series in at once)."""
     v = voltage_at(f_set_mhz, vid_900)
     p = gpu_static_power(vid_900, temp_c) \
         + K_DYN * (f_set_mhz / 1000.0) * v * v * util
-    return min(p, tdp_w)
+    if np.ndim(p) == 0:
+        return min(float(p), tdp_w)
+    return np.minimum(p, tdp_w)
 
 
 # ---------------------------------------------------------------------------
@@ -177,10 +183,12 @@ def lookahead_perf_scale(depth: int) -> float:
     return 1.0 if depth >= 1 else 0.96
 
 
-def fan_curve(load: float) -> float:
+def fan_curve(load):
     """Load-adaptive fan duty (paper: 'a curve that defines different FAN
-    duty cycles for different load levels', used at the end of the run)."""
-    return float(np.clip(0.15 + 0.25 * load / 0.9, 0.15, 0.40))
+    duty cycles for different load levels', used at the end of the run).
+    Array-aware: a load series returns a duty series."""
+    duty = np.clip(0.15 + 0.25 * np.asarray(load) / 0.9, 0.15, 0.40)
+    return float(duty) if np.ndim(load) == 0 else duty
 
 
 # ---------------------------------------------------------------------------

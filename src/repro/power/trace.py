@@ -15,11 +15,18 @@ trace is a struct-of-arrays:
 
 Compute power (``power_w``) excludes the ``network`` component — the
 Green500 methodology treats switches separately per measurement level.
+
+Storage is columnar (struct-of-arrays, the RAPS idiom): scalar ``emit``
+calls append to per-series Python lists, bulk ``emit_series`` calls seal
+whole numpy chunks, and ``trace()`` concatenates — no per-sample dict
+rows, so the vectorized cluster engine can land a 160-node run in a
+handful of array appends.  ``t_last`` is a running maximum (O(1)) and
+``trace()`` only sorts when emissions actually arrived out of order.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -37,6 +44,11 @@ class PowerTrace:
     flops_rate: np.ndarray
     aux: Dict[str, np.ndarray] = field(default_factory=dict)
     meta: Dict[str, Any] = field(default_factory=dict)
+    # traces are effectively immutable post-construction, so the component
+    # sum is computed once (the Green500 L1/L2/L3 window scans hit
+    # ``power_w`` per call) — never invalidated
+    _power_w_cache: Optional[np.ndarray] = field(
+        default=None, init=False, repr=False, compare=False)
 
     def __post_init__(self):
         self.t = np.asarray(self.t, dtype=float)
@@ -64,12 +76,15 @@ class PowerTrace:
 
     @property
     def power_w(self) -> np.ndarray:
-        """Compute-subsystem wall power (all components except network)."""
-        out = np.zeros_like(self.t)
-        for name, w in self.components.items():
-            if name != NETWORK:
-                out = out + w
-        return out
+        """Compute-subsystem wall power (all components except network).
+        Cached on first access (traces are immutable by convention)."""
+        if self._power_w_cache is None:
+            out = np.zeros_like(self.t)
+            for name, w in self.components.items():
+                if name != NETWORK:
+                    out = out + w
+            self._power_w_cache = out
+        return self._power_w_cache
 
     @property
     def network_w(self) -> float:
@@ -140,52 +155,147 @@ class PowerTrace:
                           aux=dict(self.aux), meta=dict(self.meta))
 
 
+@dataclass
+class _Chunk:
+    """One sealed columnar block of samples (all arrays share a length)."""
+
+    t: np.ndarray
+    comps: Dict[str, np.ndarray]
+    flops: np.ndarray
+    aux: Dict[str, np.ndarray]
+
+
 class TraceRecorder:
-    """Telemetry event bus: workloads ``emit`` samples, consumers take the
-    assembled :class:`PowerTrace`.
+    """Telemetry event bus: workloads ``emit`` samples (or whole series
+    via ``emit_series``), consumers take the assembled
+    :class:`PowerTrace`.
 
     With ``dt_s`` set, ``trace()`` resamples every series onto the fixed
     interval grid (RAPS-style); otherwise the raw emission times are
     kept.  Components missing from a sample read as 0 W at that time.
+
+    Internally columnar: scalar emissions append to per-series lists
+    (sealed into a chunk lazily), bulk emissions become chunks directly,
+    and ``trace()`` concatenates — sorting only if some emission
+    actually arrived out of time order.
     """
 
     def __init__(self, *, dt_s: Optional[float] = None, source: str = ""):
         self.dt_s = dt_s
         self.source = source
-        self._rows: List[Tuple[float, Dict[str, float], float,
-                               Dict[str, float]]] = []
+        self._chunks: List[_Chunk] = []
+        # open scalar-append buffer (column lists, zero-backfilled)
+        self._buf_t: List[float] = []
+        self._buf_flops: List[float] = []
+        self._buf_comp: Dict[str, List[float]] = {}
+        self._buf_aux: Dict[str, List[float]] = {}
+        self._n = 0
+        self._t_max = -np.inf      # running max → O(1) t_last
+        self._t_prev = -np.inf     # last emission time → ordered flag
+        self._ordered = True
 
     def __len__(self) -> int:
-        return len(self._rows)
+        return self._n
 
     @property
     def t_last(self) -> float:
         """Latest emitted sample time (0.0 on an empty recorder) — lets
         sequential phases stack onto one shared bus."""
-        return max(r[0] for r in self._rows) if self._rows else 0.0
+        return float(self._t_max) if self._n else 0.0
+
+    def _note_times(self, t_first: float, t_last: float,
+                    monotonic: bool) -> None:
+        if not monotonic or t_first < self._t_prev:
+            self._ordered = False
+        self._t_prev = t_last
+        if t_last > self._t_max:
+            self._t_max = t_last
 
     def emit(self, t: float, watts: Dict[str, float], *,
              flops_rate: float = 0.0, **aux: float) -> None:
         """Record one sample: absolute time [s], component watts,
         instantaneous GFLOPS, and any extra series (util=, f_mhz=,
         temp_c=, …)."""
-        self._rows.append((float(t), {k: float(v) for k, v in watts.items()},
-                           float(flops_rate),
-                           {k: float(v) for k, v in aux.items()}))
+        t = float(t)
+        self._note_times(t, t, True)
+        n = len(self._buf_t)
+        self._buf_t.append(t)
+        self._buf_flops.append(float(flops_rate))
+        for k, v in watts.items():
+            col = self._buf_comp.get(k)
+            if col is None:             # late-appearing component: backfill
+                col = self._buf_comp[k] = [0.0] * n
+            col.append(float(v))
+        for k, v in aux.items():
+            col = self._buf_aux.get(k)
+            if col is None:
+                col = self._buf_aux[k] = [0.0] * n
+            col.append(float(v))
+        m = n + 1
+        for col in self._buf_comp.values():
+            if len(col) < m:            # component absent this sample: 0 W
+                col.append(0.0)
+        for col in self._buf_aux.values():
+            if len(col) < m:
+                col.append(0.0)
+        self._n += 1
+
+    def emit_series(self, t, watts: Dict[str, np.ndarray], *,
+                    flops_rate=0.0, **aux) -> None:
+        """Bulk columnar emission: a whole time series of samples in one
+        call — the vectorized engines' path.  ``t`` is a 1-D array of
+        sample times; component/aux values and ``flops_rate`` may be
+        arrays of the same length or scalars (broadcast)."""
+        t = np.asarray(t, dtype=float)
+        if t.ndim != 1 or t.size == 0:
+            raise ValueError("emit_series needs a non-empty 1-D time array")
+        self._seal_buffer()
+        n = t.shape[0]
+
+        def col(v) -> np.ndarray:
+            return np.broadcast_to(np.asarray(v, dtype=float), (n,)).copy()
+
+        self._chunks.append(_Chunk(
+            t.copy(), {k: col(v) for k, v in watts.items()},
+            col(flops_rate), {k: col(v) for k, v in aux.items()}))
+        self._note_times(float(t[0]), float(t[-1]),
+                         bool(np.all(np.diff(t) >= 0.0)))
+        self._t_max = max(self._t_max, float(np.max(t)))
+        self._n += n
+
+    def _seal_buffer(self) -> None:
+        """Convert the open scalar-append buffer into a sealed chunk."""
+        if not self._buf_t:
+            return
+        self._chunks.append(_Chunk(
+            np.array(self._buf_t),
+            {k: np.array(v) for k, v in self._buf_comp.items()},
+            np.array(self._buf_flops),
+            {k: np.array(v) for k, v in self._buf_aux.items()}))
+        self._buf_t, self._buf_flops = [], []
+        self._buf_comp, self._buf_aux = {}, {}
 
     def trace(self) -> PowerTrace:
-        if not self._rows:
+        if not self._n:
             raise ValueError("TraceRecorder has no samples")
-        rows = sorted(self._rows, key=lambda r: r[0])
-        t = np.array([r[0] for r in rows])
-        comp_names = sorted({k for r in rows for k in r[1]})
-        aux_names = sorted({k for r in rows for k in r[3]})
-        comps = {name: np.array([r[1].get(name, 0.0) for r in rows])
-                 for name in comp_names}
-        flops = np.array([r[2] for r in rows])
-        aux = {name: np.array([r[3].get(name, 0.0) for r in rows])
-               for name in aux_names}
-        if self.dt_s is not None and len(rows) > 1:
+        self._seal_buffer()
+        chunks = self._chunks
+        comp_names = sorted({k for c in chunks for k in c.comps})
+        aux_names = sorted({k for c in chunks for k in c.aux})
+        t = np.concatenate([c.t for c in chunks])
+        flops = np.concatenate([c.flops for c in chunks])
+        comps = {name: np.concatenate(
+            [c.comps.get(name, np.zeros(c.t.shape[0])) for c in chunks])
+            for name in comp_names}
+        aux = {name: np.concatenate(
+            [c.aux.get(name, np.zeros(c.t.shape[0])) for c in chunks])
+            for name in aux_names}
+        if not self._ordered:           # only sort when actually needed
+            order = np.argsort(t, kind="stable")
+            t, flops = t[order], flops[order]
+            comps = {k: w[order] for k, w in comps.items()}
+            aux = {k: w[order] for k, w in aux.items()}
+        if self.dt_s is not None and t.shape[0] > 1:
             grid = np.arange(t[0], t[-1] + 0.5 * self.dt_s, self.dt_s)
             comps = {n: np.interp(grid, t, w) for n, w in comps.items()}
             aux = {n: np.interp(grid, t, w) for n, w in aux.items()}

@@ -1,0 +1,296 @@
+"""The vectorized interval-driven cluster engine and its supporting
+machinery: sample-for-sample (bit-level) equivalence of
+``cluster.run._merged_trace`` against the legacy per-tick loop oracle
+``_merged_trace_reference`` across schedule shapes, the columnar
+``TraceRecorder`` (scalar + bulk emission, ordering, resampling), the
+cached ``PowerTrace.power_w``, and the batched layer entry points."""
+import numpy as np
+import pytest
+
+from repro.cluster.run import _merged_trace, _merged_trace_reference
+from repro.cluster.scheduler import ClusterTopology, Job, Scheduler
+from repro.power.layers import GPUModel, NodeModel, lcsc_cluster
+from repro.power.model import OperatingPoint
+from repro.power.trace import PowerTrace, TraceRecorder
+
+OP = OperatingPoint.green500()
+
+
+def assert_traces_identical(a: PowerTrace, b: PowerTrace):
+    """Bit-level: every series equal sample-for-sample, no tolerance."""
+    assert np.array_equal(a.t, b.t)
+    assert sorted(a.components) == sorted(b.components)
+    for name in a.components:
+        assert np.array_equal(a.components[name], b.components[name]), name
+    assert np.array_equal(a.flops_rate, b.flops_rate)
+    assert sorted(a.aux) == sorted(b.aux)
+    for name in a.aux:
+        assert np.array_equal(a.aux[name], b.aux[name]), name
+    assert a.meta == b.meta
+
+
+# -- vectorized merge vs the per-tick loop oracle ----------------------------
+
+
+def _schedule(topology, jobs, *, policy="packed", power_cap_w=None, op=OP):
+    sch = Scheduler(topology, policy=policy,
+                    power_cap_w=power_cap_w).schedule(jobs, op=op)
+    sch.meta["policy"] = policy
+    return sch
+
+
+def _compare(schedule, dt_s=13.0, network_w=257.0):
+    vec = _merged_trace(schedule, dt_s=dt_s, network_w=network_w)
+    ref = _merged_trace_reference(schedule, dt_s=dt_s, network_w=network_w)
+    assert_traces_identical(vec, ref)
+    return vec
+
+
+def test_equivalence_packed_uniform_batch():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job(f"lat{i}", 13.0, 600.0) for i in range(top.n_chips)]
+    tr = _compare(_schedule(top, jobs), dt_s=30.0)
+    # all chips busy for the whole batch: full-load composition
+    expect = NodeModel().power(OP) * top.n_nodes
+    assert float(tr.power_w[0]) == pytest.approx(expect, rel=1e-9)
+
+
+def test_equivalence_packed_queued_mixed_durations():
+    # more jobs than chips with staggered durations: multiple placements
+    # per chip, boundary-sharing intervals, makespan off the dt grid
+    rng = np.random.default_rng(0)
+    top = ClusterTopology(n_nodes=3)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(50.0, 700.0)))
+            for i in range(40)]
+    _compare(_schedule(top, jobs), dt_s=7.0)
+
+
+def test_equivalence_round_robin_sharded():
+    rng = np.random.default_rng(1)
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(100.0, 500.0)))
+            for i in range(10)]
+    sch = _schedule(top, jobs, policy="round_robin")
+    assert all(p.sharded for p in sch.placements)
+    _compare(sch, dt_s=11.0)
+
+
+def test_equivalence_power_capped_derated_op():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job(f"j{i}", 13.0, 300.0) for i in range(8)]
+    sch = _schedule(top, jobs, power_cap_w=3.5e3)
+    assert sch.derated and sch.op.f_mhz < OP.f_mhz
+    _compare(sch, dt_s=17.0)
+
+
+def test_equivalence_heterogeneous_pacing():
+    # per-chip perf spread: every placement gets its own rate and
+    # duration, so interval boundaries land on irrational-ish times
+    rng = np.random.default_rng(2)
+    top = ClusterTopology(n_nodes=4,
+                          perf_scales=tuple(rng.uniform(0.8, 1.0, 16)))
+    jobs = [Job(f"j{i}", float(rng.choice([13.0, 30.0])),
+                float(rng.uniform(50.0, 400.0))) for i in range(30)]
+    _compare(_schedule(top, jobs), dt_s=9.0)
+
+
+def test_equivalence_partial_occupancy_and_idle_nodes():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job("only", 13.0, 100.0)]
+    tr = _compare(_schedule(top, jobs), dt_s=30.0)
+    assert float(tr.aux["util"][0]) == pytest.approx(1 / 16)
+
+
+def test_equivalence_empty_schedule_idle_trace():
+    sch = _schedule(ClusterTopology(n_nodes=2), [])
+    tr = _compare(sch, dt_s=30.0)
+    # one idle interval spanning dt_s, nothing computed
+    assert np.all(tr.flops_rate == 0.0)
+    assert float(tr.t[-1]) == 30.0
+
+
+def test_equivalence_zero_work_job_is_invisible():
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job("real", 13.0, 200.0), Job("noop", 13.0, 0.0)]
+    _compare(_schedule(top, jobs), dt_s=30.0)
+
+
+def test_vectorized_trace_feeds_green500():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job(f"j{i}", 13.0, 1800.0) for i in range(top.n_chips)]
+    tr = _merged_trace(_schedule(top, jobs), dt_s=30.0, network_w=257.0)
+    from repro.power.green500 import measure_efficiency
+    assert measure_efficiency(tr, 3).mflops_per_w > 4000.0
+
+
+# -- columnar TraceRecorder ---------------------------------------------------
+
+
+def test_emit_series_matches_scalar_emits():
+    t = np.arange(0.0, 50.0, 5.0)
+    gpu = np.linspace(100.0, 200.0, t.size)
+    util = np.linspace(0.1, 1.0, t.size)
+    scalar = TraceRecorder(source="s")
+    for i, ti in enumerate(t):
+        scalar.emit(ti, {"gpu": gpu[i], "host": 137.8}, flops_rate=7.0,
+                    util=util[i])
+    bulk = TraceRecorder(source="s")
+    bulk.emit_series(t, {"gpu": gpu, "host": 137.8}, flops_rate=7.0,
+                     util=util)
+    assert len(bulk) == len(scalar) == t.size
+    assert_traces_identical(scalar.trace(), bulk.trace())
+
+
+def test_mixed_scalar_and_series_chunks_zero_backfill():
+    rec = TraceRecorder()
+    rec.emit(0.0, {"gpu": 100.0}, util=0.5)           # no "net" yet
+    rec.emit_series([1.0, 2.0], {"net": [5.0, 6.0]})  # no "gpu" here
+    rec.emit(3.0, {"gpu": 50.0, "net": 7.0}, temp_c=55.0)
+    tr = rec.trace()
+    assert np.array_equal(tr.components["gpu"], [100.0, 0.0, 0.0, 50.0])
+    assert np.array_equal(tr.components["net"], [0.0, 5.0, 6.0, 7.0])
+    assert np.array_equal(tr.aux["util"], [0.5, 0.0, 0.0, 0.0])
+    assert np.array_equal(tr.aux["temp_c"], [0.0, 0.0, 0.0, 55.0])
+
+
+def test_out_of_order_emissions_are_sorted():
+    rec = TraceRecorder()
+    rec.emit(10.0, {"p": 2.0}, flops_rate=2.0)
+    rec.emit(0.0, {"p": 1.0}, flops_rate=1.0)
+    rec.emit_series([5.0], {"p": [1.5]}, flops_rate=1.5)
+    assert not rec._ordered
+    tr = rec.trace()
+    assert np.array_equal(tr.t, [0.0, 5.0, 10.0])
+    assert np.array_equal(tr.components["p"], [1.0, 1.5, 2.0])
+    assert np.array_equal(tr.flops_rate, [1.0, 1.5, 2.0])
+
+
+def test_ordered_emissions_skip_the_sort():
+    rec = TraceRecorder()
+    rec.emit(0.0, {"p": 1.0})
+    rec.emit_series([1.0, 2.0], {"p": [2.0, 3.0]})
+    rec.emit(2.0, {"p": 4.0})        # ties keep insertion order (stable)
+    assert rec._ordered
+    assert np.array_equal(rec.trace().components["p"],
+                          [1.0, 2.0, 3.0, 4.0])
+
+
+def test_t_last_is_a_running_max():
+    rec = TraceRecorder()
+    assert rec.t_last == 0.0
+    rec.emit(5.0, {"p": 1.0})
+    assert rec.t_last == 5.0
+    rec.emit_series([1.0, 9.0, 3.0], {"p": 0.0})   # interior max
+    assert rec.t_last == 9.0
+    rec.emit(2.0, {"p": 1.0})
+    assert rec.t_last == 9.0
+
+
+def test_emit_series_resamples_on_dt_grid():
+    rec = TraceRecorder(dt_s=1.0)
+    rec.emit_series([0.0, 2.0], {"p": [0.0, 4.0]}, flops_rate=[0.0, 2.0])
+    tr = rec.trace()
+    assert np.array_equal(tr.t, [0.0, 1.0, 2.0])
+    assert np.array_equal(tr.components["p"], [0.0, 2.0, 4.0])
+    assert tr.meta["dt_s"] == 1.0
+
+
+def test_emit_series_broadcasts_scalars_and_validates():
+    rec = TraceRecorder()
+    rec.emit_series([0.0, 1.0, 2.0], {"p": 3.0}, flops_rate=1.0, fan=0.4)
+    tr = rec.trace()
+    assert np.array_equal(tr.components["p"], [3.0, 3.0, 3.0])
+    assert np.array_equal(tr.aux["fan"], [0.4, 0.4, 0.4])
+    with pytest.raises(ValueError, match="1-D"):
+        rec.emit_series([], {"p": 1.0})
+    with pytest.raises(ValueError, match="1-D"):
+        rec.emit_series([[0.0, 1.0]], {"p": 1.0})
+
+
+def test_empty_recorder_still_raises():
+    with pytest.raises(ValueError, match="no samples"):
+        TraceRecorder().trace()
+
+
+def test_power_w_is_cached_and_correct():
+    tr = PowerTrace(np.arange(3.0), {"gpu": np.ones(3),
+                                     "host": 2.0 * np.ones(3),
+                                     "network": 9.0 * np.ones(3)},
+                    np.zeros(3))
+    first = tr.power_w
+    assert np.array_equal(first, [3.0, 3.0, 3.0])   # network excluded
+    assert tr.power_w is first                       # cached object
+
+
+# -- batched layer entry points ----------------------------------------------
+
+
+def test_node_component_watts_batch_matches_scalar():
+    node = NodeModel()
+    w_busy = node.gpus[0].power(OP, load=1.0)
+    w_idle = node.gpus[0].power(OP, load=0.0)
+    counts = np.array([0, 1, 2, 3, 4, 4, 0])
+    batch = node.component_watts_batch(OP, counts)
+    for i, b in enumerate(counts):
+        scalar = node.component_watts(
+            OP, gpu_w_override=[w_busy] * b + [w_idle] * (4 - b))
+        for name, w in scalar.items():
+            assert w == batch[name][i], (name, b)
+
+
+def test_node_component_watts_batch_rejects_bad_counts():
+    with pytest.raises(ValueError, match=r"busy counts"):
+        NodeModel().component_watts_batch(OP, np.array([5]))
+    with pytest.raises(ValueError, match=r"busy counts"):
+        NodeModel().component_watts_batch(OP, np.array([-1]))
+
+
+def test_gpu_power_batch_matches_scalar():
+    gpu = GPUModel()
+    loads = np.linspace(0.0, 1.0, 7)
+    batch = gpu.power_batch(OP, load=loads)
+    for i, ld in enumerate(loads):
+        assert gpu.power(OP, load=float(ld)) == batch[i]
+    assert gpu.component_watts_batch(OP, load=loads)["gpu"][3] == batch[3]
+
+
+def test_node_series_matches_scalar_per_sample():
+    node = NodeModel()
+    loads = np.linspace(0.0, 1.0, 5)
+    fans = np.clip(loads, 0.15, 0.40)
+    series = node.component_watts_series(OP, load=loads, fan=fans)
+    for i in range(loads.size):
+        scalar = node.component_watts(OP, load=float(loads[i]),
+                                      fan=float(fans[i]))
+        for name, w in scalar.items():
+            assert w == series[name][i], name
+
+
+def test_cluster_series_matches_scalar_per_sample():
+    cluster = lcsc_cluster(n_nodes=2, nodes_per_rack=2)
+    loads = np.array([0.0, 0.5, 1.0])
+    series = cluster.component_watts_series(OP, load=loads)
+    for i, ld in enumerate(loads):
+        scalar = cluster.component_watts(OP, load=float(ld))
+        for name, w in scalar.items():
+            assert w == series[name][i], name
+
+
+def test_simulate_is_equivalent_to_scalar_ticking():
+    from repro.power.engine import ConstantLoad, SyntheticHPL, simulate
+    from repro.power.model import fan_curve
+
+    cluster = lcsc_cluster(n_nodes=2, nodes_per_rack=2)
+    wl = SyntheticHPL(duration_s=600.0)
+    tr = simulate(wl, OP, cluster=cluster, dt_s=60.0)
+    # the batched series path must reproduce the scalar per-tick layers
+    for i, t in enumerate(np.arange(0.0, wl.duration_s + 60.0, 60.0)):
+        load = float(np.clip(wl.load(min(t, wl.duration_s)), 0.0, 1.0))
+        fan = min(OP.fan, fan_curve(load))
+        watts = cluster.component_watts(OP, load=load, fan=fan)
+        for name, w in watts.items():
+            assert w == tr.components[name][i], (name, i)
+    # constant load never derates the fan below the set point
+    flat = simulate(ConstantLoad(duration_s=120.0), OP, cluster=cluster,
+                    dt_s=60.0, adaptive_fan=False)
+    assert np.all(flat.aux["fan"] == OP.fan)
