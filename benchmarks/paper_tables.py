@@ -479,6 +479,90 @@ def cluster_scale() -> List[Row]:
     return rows
 
 
+# -- §1: online operation — arrival queue, backfill, failures -----------------
+
+def cluster_online() -> List[Row]:
+    """L-CSC as a *live* machine through the discrete-event simulator:
+    (1) the Green500 batch pushed through the arrival queue reproduces
+    the same 57.2 kW trace bit-for-bit (the oracle property at benchmark
+    scale); (2) conservative backfill beats plain FCFS on utilization
+    over a mixed-width Poisson stream; (3) a simulated week of the full
+    160-node machine with Weibull node failures stays interactive and
+    inside the full-load power envelope."""
+    from repro.cluster import (ClusterTopology, Job, PoissonArrivals, run,
+                               simulate)
+    from repro.distributed.fault import WeibullFailureModel
+    from repro.power import OperatingPoint
+    from repro.power.layers import NodeModel
+
+    op = OperatingPoint.green500()
+    rows: List[Row] = []
+
+    # -- Green500 batch through the queue: bit-equal to cluster.run() --------
+    top56 = ClusterTopology(n_nodes=56)
+    jobs56 = [Job(f"lat{i}", 13.0, 1800.0) for i in range(top56.n_chips)]
+    batch = run(jobs56, policy="packed", topology=top56, op=op, dt_s=30.0)
+    t0 = time.perf_counter()
+    online = simulate(jobs56, topology=top56, op=op, dt_s=30.0,
+                      backfill=False)
+    online_s = time.perf_counter() - t0
+    assert np.array_equal(online.trace.t, batch.trace.t)
+    for name in online.trace.components:
+        assert np.array_equal(online.trace.components[name],
+                              batch.trace.components[name]), \
+            f"online {name} series diverged from the batch oracle"
+    assert np.array_equal(online.trace.flops_rate, batch.trace.flops_rate)
+    p_kw = float(np.mean(online.trace.power_w)) / 1e3
+    assert abs(p_kw - 57.2) / 57.2 < 0.02            # 57.2 kW, queued
+    rows.append(("online/green500_queued", online_s * 1e6,
+                 f"kw={p_kw:.2f};paper=57.2;"
+                 f"util={online.stats.utilization:.3f};"
+                 f"mflops_w={online.efficiency(3).mflops_per_w:.1f}"))
+
+    # -- backfill vs FCFS on a mixed-width open queue ------------------------
+    rng = np.random.default_rng(8)
+    jobs = [Job(f"j{i}", 52.0 if i % 3 == 0 else 13.0,
+                float(rng.uniform(300.0, 2400.0))) for i in range(200)]
+    arr = PoissonArrivals(jobs, rate_per_s=1 / 15.0, seed=9)
+    top8 = ClusterTopology(n_nodes=8)
+    fcfs = simulate(arr, topology=top8, op=op, dt_s=60.0, backfill=False)
+    easy = simulate(arr, topology=top8, op=op, dt_s=60.0, backfill=True)
+    assert easy.stats.utilization > fcfs.stats.utilization
+    assert easy.makespan <= fcfs.makespan
+    rows.append(("online/backfill_vs_fcfs", 0.0,
+                 f"util_fcfs={fcfs.stats.utilization:.3f};"
+                 f"util_easy={easy.stats.utilization:.3f};"
+                 f"makespan_gain="
+                 f"{1 - easy.makespan / fcfs.makespan:.1%}"))
+
+    # -- a week of the full machine with failures ----------------------------
+    rng = np.random.default_rng(10)
+    week_jobs = [Job(f"j{i}", 52.0 if i % 5 == 0 else 13.0,
+                     float(rng.uniform(1800.0, 4 * 3600.0)))
+                 for i in range(3000)]
+    warr = PoissonArrivals(week_jobs, rate_per_s=1 / 200.0, seed=11)
+    fm = WeibullFailureModel(mtbf_s=1000.0 * 3600.0, repair_s=2 * 3600.0)
+    top160 = ClusterTopology(n_nodes=160)
+    t0 = time.perf_counter()
+    week = simulate(warr, topology=top160, op=op, dt_s=60.0,
+                    failure_model=fm, seed=12)
+    week_s = time.perf_counter() - t0
+    assert week_s < 10.0, f"160-node week took {week_s:.1f}s"
+    assert week.stats.node_failures > 0 and week.stats.requeues > 0
+    assert week.makespan > 6 * 24 * 3600.0
+    # failures only ever *remove* load: never above the flat-out envelope
+    env = NodeModel().power(op) * 160 + top160.network_w
+    assert float(np.max(week.trace.power_w)) <= env * (1 + 1e-9)
+    rows.append(("online/week_160_failures", week_s * 1e6,
+                 f"jobs={week.stats.jobs_completed};"
+                 f"fails={week.stats.node_failures};"
+                 f"requeues={week.stats.requeues};"
+                 f"util={week.stats.utilization:.3f};"
+                 f"kwh={week.stats.energy_kwh:.0f};"
+                 f"cost=${week.stats.cost_usd:.0f};wall_s={week_s:.2f}"))
+    return rows
+
+
 def _timed(fn) -> float:
     t0 = time.perf_counter()
     fn()

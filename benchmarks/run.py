@@ -40,6 +40,7 @@ def benches():
         paper_tables.autotune_operating_point,
         paper_tables.cluster_schedule,
         paper_tables.cluster_scale,
+        paper_tables.cluster_online,
         paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,

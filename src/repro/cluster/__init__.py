@@ -9,8 +9,12 @@ cluster-level :class:`repro.power.PowerTrace`:
   :mod:`repro.cluster.workload`   Workload protocol, registry, adapters
   :mod:`repro.cluster.scheduler`  Job/Chip/Placement, topologies,
                                   policies, power-cap enforcement,
-                                  straggler models
+                                  straggler models, the online ChipPool
   :mod:`repro.cluster.run`        ``run(jobs, policy) → ClusterRunResult``
+  :mod:`repro.cluster.sim`        online discrete-event simulator
+                                  (arrival queues, backfill, failures)
+  :mod:`repro.cluster.events`     arrival sources (Poisson / trace)
+  :mod:`repro.cluster.stats`      RAPS-style end-of-run report
 
 Quick use::
 
@@ -19,6 +23,15 @@ Quick use::
     res.trace.avg_power()      # merged cluster watts through the PR-3 bus
     res.efficiency(3)          # Green500 L3 over the merged trace
 
+Online operation (open queue, failures)::
+
+    from repro.cluster import Job, PoissonArrivals, simulate
+    from repro.distributed.fault import WeibullFailureModel
+    jobs = [Job(f"lat{i}", 13.0, 3600.0) for i in range(500)]
+    res = simulate(PoissonArrivals(jobs, rate_per_s=0.05, seed=1),
+                   failure_model=WeibullFailureModel(mtbf_s=3.6e6))
+    print(res.stats.summary())  # utilization, waits, energy, $ cost
+
 The pre-power-bus job model (``repro.core.energy.scheduler``) is a
 deprecated shim over :mod:`repro.cluster.scheduler`.
 """
@@ -26,6 +39,7 @@ from repro.cluster.scheduler import (  # noqa: F401
     GREEN500_TOPOLOGY,
     L_CSC_TOPOLOGY,
     Chip,
+    ChipPool,
     ClusterTopology,
     Job,
     Placement,
@@ -56,3 +70,12 @@ from repro.cluster.workload import (  # noqa: F401
     register_workload,
 )
 from repro.cluster.run import ClusterRunResult, run  # noqa: F401
+from repro.cluster.events import (  # noqa: F401
+    Arrival,
+    PoissonArrivals,
+    TraceArrivals,
+    as_arrivals,
+    batch_arrivals,
+)
+from repro.cluster.stats import JobRecord, SimStats  # noqa: F401
+from repro.cluster.sim import SimResult, simulate  # noqa: F401

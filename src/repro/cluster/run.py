@@ -140,17 +140,14 @@ def _merged_trace(schedule: Schedule, *, dt_s: float,
     util_int = np.sum(active, axis=1) / n_chips
 
     # -- broadcast onto the dt_s grid: each sample reads the interval it
-    #    falls in (the final sample at t == span reads the left limit)
-    ts = _sample_grid(span, dt_s)
-    idx = np.searchsorted(starts, np.minimum(ts, span - 1e-9),
-                          side="right") - 1
-    idx = np.clip(idx, 0, n_int - 1)
-
+    #    falls in (the final sample at t == span reads the left limit);
+    #    the piecewise-constant ingestion lives on the recorder so the
+    #    online simulator's event boundaries ride the same path
+    watts_int["network"] = np.full(n_int, float(network_w))
     rec = TraceRecorder(source="cluster.run")
-    watts = {name: w[idx] for name, w in watts_int.items()}
-    watts["network"] = np.full(ts.shape, float(network_w))
-    rec.emit_series(ts, watts, flops_rate=flops_int[idx],
-                    util=util_int[idx], f_mhz=op.f_mhz, fan=op.fan)
+    rec.emit_intervals(starts, watts_int, span=span, dt_s=dt_s,
+                       flops_rate=flops_int, util=util_int,
+                       f_mhz=op.f_mhz, fan=op.fan)
     trace = rec.trace()
     _stamp_cluster_meta(trace, schedule)
     return trace
@@ -232,9 +229,9 @@ def run(workloads: Sequence[Union[Workload, Job]], *,
         else:
             jobs.append(w.job())
             adapters.append(w)
-    if op is None:
-        op = next((j.preferred_op for j in jobs
-                   if j.preferred_op is not None), None)
+    # op defaults to the first job's preferred_op inside
+    # Scheduler.resolve_operating_point (which also warns when other
+    # jobs' preferred points have to be dropped)
 
     sched = Scheduler(topology, policy=policy, power_cap_w=power_cap_w)
     schedule = sched.schedule(jobs, op=op)

@@ -23,6 +23,7 @@ dropping) ride along unchanged.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -151,11 +152,17 @@ def synchronous_rate(perf_scales: Sequence[float],
 
 
 def _commit_placement(job: Job, pool: List[Chip],
-                      penalty: float) -> Placement:
+                      penalty: float, *,
+                      now: Optional[float] = None) -> Placement:
     """Book ``job`` onto ``pool``: earliest common start, synchronous-step
     pacing, busy_until advanced on every chip.  The one placement
-    definition both the Scheduler and the legacy flat API use."""
+    definition the Scheduler, the online simulator, and the legacy flat
+    API all use.  ``now`` clamps the start to the current simulation
+    time (an online dispatch can't start in the past); the batch path
+    leaves it unset."""
     start = max(c.busy_until for c in pool)
+    if now is not None and now > start:
+        start = now
     rate = synchronous_rate([c.perf_scale for c in pool], penalty)
     dur = job.work_units / rate
     for c in pool:
@@ -194,10 +201,33 @@ class Scheduler:
     # -- power cap ---------------------------------------------------------
 
     def resolve_operating_point(self, op: Optional[OperatingPoint] = None,
+                                jobs: Sequence[Job] = (),
                                 ) -> Tuple[OperatingPoint, bool]:
         """Derate ``op`` down the S9150 DPM ladder until the full-load
-        cluster draw fits the cap.  Returns (op, derated)."""
+        cluster draw fits the cap.  Returns (op, derated).
+
+        When ``jobs`` are given, ``op`` defaults to the first job's
+        ``preferred_op``; the whole batch then runs at that single point
+        (heterogeneous per-node DVFS is a ROADMAP item), so any *other*
+        preferred operating point in the batch is dropped — with a
+        warning naming the dropped points, not silently."""
+        prefs = [(j.name, j.preferred_op) for j in jobs
+                 if j.preferred_op is not None]
+        if op is None and prefs:
+            op = prefs[0][1]
         op = op or OperatingPoint.green500()
+        dropped: Dict[float, str] = {}
+        for name, p in prefs:
+            if p != op and p.f_mhz not in dropped:
+                dropped[p.f_mhz] = name
+        if dropped:
+            points = ", ".join(f"{f:.0f} MHz (job {name!r})"
+                               for f, name in sorted(dropped.items()))
+            warnings.warn(
+                f"batch runs at a single operating point "
+                f"({op.f_mhz:.0f} MHz); dropping preferred operating "
+                f"points: {points} — per-node heterogeneous DVFS is not "
+                f"supported yet", UserWarning, stacklevel=3)
         if self.power_cap_w is None:
             return op, False
         from repro.autotune.space import S9150_DPM_STATES_MHZ
@@ -227,7 +257,7 @@ class Scheduler:
 
     def schedule(self, jobs: Sequence[Job], *,
                  op: Optional[OperatingPoint] = None) -> Schedule:
-        op, derated = self.resolve_operating_point(op)
+        op, derated = self.resolve_operating_point(op, jobs=jobs)
         chips = self.topology.chips()
         placements: List[Placement] = []
         for job in sorted(jobs, key=lambda j: -j.work_units):
@@ -279,6 +309,130 @@ class Scheduler:
     def _place(self, job: Job, chips: List[Chip]) -> Placement:
         pool = self._pick_pool(self._chips_needed(job), chips)
         return _commit_placement(job, pool, self.penalty)
+
+
+# ---------------------------------------------------------------------------
+# Online chip pool (the discrete-event simulator's state)
+# ---------------------------------------------------------------------------
+
+
+class ChipPool:
+    """Online chip-state tracker for the discrete-event simulator
+    (:mod:`repro.cluster.sim`).
+
+    The batch :class:`Scheduler` books a whole batch onto
+    ``Chip.busy_until`` up front; this pool exposes the *same* chips —
+    same selection keys, same tie-breaks as :meth:`Scheduler._pick_pool`
+    — to an event loop that acquires chips at dispatch time and releases
+    them again on finish/failure/repair events.  A chip's ``busy_until``
+    doubles as its "free since" timestamp once idle, so
+    earliest-freed-first selection orders by ``(busy_until, chip_id)``
+    exactly like the batch scheduler: an all-arrivals-at-t=0, no-failure
+    online run reproduces the batch booking bit-for-bit (the oracle
+    property ``tests/test_cluster_sim.py`` pins down).
+    """
+
+    def __init__(self, topology: ClusterTopology, *, policy: str = "packed"):
+        if policy not in Scheduler.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {Scheduler.POLICIES}")
+        self.topology = topology
+        self.policy = policy
+        self.chips = topology.chips()
+        self._up = [True] * topology.n_nodes
+        self._down_until = [0.0] * topology.n_nodes
+
+    # -- queries -------------------------------------------------------------
+
+    def is_up(self, node_id: int) -> bool:
+        return self._up[node_id]
+
+    def node_chips(self, node_id: int) -> List[Chip]:
+        g = self.topology.gpus_per_node
+        return self.chips[node_id * g:(node_id + 1) * g]
+
+    def _select(self, need: int, chips: List[Chip],
+                key) -> Optional[List[Chip]]:
+        """The one pool-selection definition (mirrors the batch
+        scheduler): single chip → global ``min(key)``; packed shards →
+        the node whose ``need`` best chips minimize the max key time
+        (nodes visited in id order, strict improvement — first wins
+        ties); round_robin → the ``need`` globally-best chips."""
+        if need == 1:
+            if not chips:
+                return None
+            return [min(chips, key=key)]
+        if self.policy == "packed":
+            by_node: Dict[int, List[Chip]] = {}
+            for c in chips:
+                by_node.setdefault(c.node_id, []).append(c)
+            best: Optional[List[Chip]] = None
+            best_t = math.inf
+            for node_id in sorted(by_node):
+                node_chips = by_node[node_id]
+                if len(node_chips) < need:
+                    continue
+                pool = sorted(node_chips, key=key)[:need]
+                t = max(key(c)[0] for c in pool)
+                if t < best_t:
+                    best, best_t = pool, t
+            return best
+        # round_robin: stripe across nodes by global key order
+        if len(chips) < need:
+            return None
+        return sorted(chips, key=key)[:need]
+
+    def pick_now(self, need: int, t: float,
+                 exclude: frozenset = frozenset()) -> Optional[List[Chip]]:
+        """A pool of ``need`` chips that are free *right now* (idle, on
+        an up node, not in ``exclude``), or None.  ``exclude`` carries a
+        blocked queue head's reserved chips during backfill."""
+        free = [c for c in self.chips
+                if self._up[c.node_id] and c.busy_until <= t
+                and c.chip_id not in exclude]
+        return self._select(need, free,
+                            key=lambda c: (c.busy_until, c.chip_id))
+
+    def earliest_pool(self, need: int,
+                      ) -> Tuple[Optional[List[Chip]], float]:
+        """Projected reservation for a blocked queue head: the pool of
+        ``need`` chips that frees up earliest given current bookings and
+        node outages (a down node's chips come back at its repair time).
+        Returns ``(chips, t_free)``."""
+        def avail(c: Chip) -> float:
+            t = c.busy_until
+            if not self._up[c.node_id]:
+                t = max(t, self._down_until[c.node_id])
+            return t
+
+        pool = self._select(need, self.chips,
+                            key=lambda c: (avail(c), c.chip_id))
+        if pool is None:
+            return None, math.inf
+        return pool, max(avail(c) for c in pool)
+
+    # -- release hooks (the event loop's state transitions) ------------------
+
+    def release(self, chip_ids: Sequence[int], t: float) -> None:
+        """Roll a killed placement's bookings back to ``t`` (node
+        failure): the chips become free-since-``t`` immediately."""
+        for cid in chip_ids:
+            self.chips[cid].busy_until = t
+
+    def fail_node(self, node_id: int, t: float, up_at: float) -> None:
+        """Take a node out of service until ``up_at``.  The caller kills
+        and :meth:`release`\\ s any placement touching its chips."""
+        self._up[node_id] = False
+        self._down_until[node_id] = up_at
+
+    def repair_node(self, node_id: int, t: float) -> None:
+        """Return a node to service: its chips read as free-since-``t``
+        (they could not have been booked while down)."""
+        self._up[node_id] = True
+        self._down_until[node_id] = 0.0
+        for c in self.node_chips(node_id):
+            if c.busy_until < t:
+                c.busy_until = t
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,305 @@
+"""Online discrete-event cluster simulator: arrival queues, FCFS +
+conservative backfill, Weibull node failures with requeue.
+
+The paper's Green500 story is a snapshot of a *live* machine — L-CSC ran
+as an operated cluster where jobs arrive, nodes fail and power varies
+over time, not as one closed batch.  This module turns
+``cluster.run(jobs, policy)`` into that RAPS-style online operation:
+
+  * an **arrival queue** (trace- or Poisson-driven submit times,
+    :mod:`repro.cluster.events`) feeds a wait queue;
+  * the **dispatcher** places FCFS, optionally with conservative
+    (EASY-style) backfill: a blocked queue head gets a chip reservation
+    at its earliest projected start, and later jobs may jump ahead only
+    onto chips outside that reservation or if they finish before it —
+    so backfill never delays the head;
+  * **node failures** are drawn from the shared
+    :class:`repro.distributed.fault.WeibullFailureModel` renewal
+    process; a failure kills the placements on that node mid-flight
+    (the power they burned stays on the trace), requeues the jobs at
+    their original queue position, and returns the node after its
+    repair time;
+  * the event loop only produces **interval boundaries** — placements
+    are piecewise-constant between events — so the merged cluster power
+    rides the PR-5 vectorized interval engine
+    (:func:`repro.cluster.run._merged_trace`) unchanged, and 160 nodes
+    × weeks of simulated time stays interactive.
+
+Determinism: everything stochastic (arrival gaps, failure draws) comes
+from seeded generators, so a ``(arrivals, seed)`` pair replays exactly.
+
+Oracle property (pinned in ``tests/test_cluster_sim.py``): with every
+arrival at t=0, no failures, and placement choices that share the batch
+scheduler's tie-breaks (:class:`repro.cluster.scheduler.ChipPool`), the
+simulator's merged ``PowerTrace`` is bit-identical to the closed-batch
+``cluster.run()`` trace.
+"""
+from __future__ import annotations
+
+import heapq
+from bisect import insort
+from dataclasses import dataclass, field
+from itertools import count
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.events import (ARRIVE, FAIL, FINISH, REPAIR, Arrival,
+                                  ArrivalsLike, as_arrivals)
+from repro.cluster.run import _merged_trace
+from repro.cluster.scheduler import (ChipPool, ClusterTopology,
+                                     GREEN500_TOPOLOGY, MULTI_GPU_SLOWDOWN,
+                                     Placement, Schedule, Scheduler,
+                                     _commit_placement, synchronous_rate)
+from repro.cluster.stats import (COMPLETED, DEFAULT_USD_PER_KWH, DROPPED,
+                                 JobRecord, SimStats, compute_stats)
+from repro.distributed.fault import WeibullFailureModel
+from repro.power.model import OperatingPoint
+from repro.power.trace import PowerTrace
+
+
+@dataclass
+class SimResult:
+    """One simulated run: the as-executed schedule (every placement,
+    including failure-truncated attempts), the merged cluster power
+    trace, the RAPS-style stats block, and the per-job records."""
+
+    schedule: Schedule
+    trace: PowerTrace
+    stats: SimStats
+    records: List[JobRecord] = field(default_factory=list)
+
+    @property
+    def op(self) -> OperatingPoint:
+        return self.schedule.op
+
+    @property
+    def makespan(self) -> float:
+        return self.schedule.makespan
+
+    def efficiency(self, level: int = 3):
+        """Green500 measurement of the merged trace."""
+        from repro.power.green500 import measure_efficiency
+        return measure_efficiency(self.trace, level)
+
+
+class _Sim:
+    """The event loop's mutable state (one run, then discarded)."""
+
+    def __init__(self, arrivals: List[Arrival], *,
+                 topology: ClusterTopology, policy: str, backfill: bool,
+                 op: Optional[OperatingPoint], power_cap_w: Optional[float],
+                 failure_model: Optional[WeibullFailureModel], seed: int,
+                 max_requeues: int, penalty: float):
+        self.topology = topology
+        self.backfill = backfill
+        self.failure_model = failure_model
+        self.max_requeues = max_requeues
+        self.penalty = penalty
+
+        sched = Scheduler(topology, policy=policy,
+                          power_cap_w=power_cap_w,
+                          multi_gpu_penalty=penalty)
+        jobs = [a.job for a in arrivals]
+        self.op, self.derated = sched.resolve_operating_point(op, jobs=jobs)
+        # chip widths validated up front: an unplaceable job fails the
+        # submit, exactly like the batch scheduler
+        self.need = [sched._chips_needed(j) for j in jobs]
+
+        self.pool = ChipPool(topology, policy=policy)
+        self.records = [JobRecord(uid, a.job, a.t)
+                        for uid, a in enumerate(arrivals)]
+        self.queue: List[JobRecord] = []        # (submit_s, uid)-sorted
+        self.running: Dict[int, Tuple[Placement, JobRecord, int]] = {}
+        self.placements: List[Placement] = []
+        self.heap: List[tuple] = []
+        self._seq = count()
+        self.pending_arrivals = len(arrivals)
+        self.queue_peak = 0
+        self.n_failures = 0
+        self.downtime_s = 0.0
+
+        for a, rec in zip(arrivals, self.records):
+            self._push(a.t, ARRIVE, ("arrive", rec.uid))
+        if failure_model is not None:
+            import numpy as np
+            self.rng = np.random.default_rng(seed)
+            for node in range(topology.n_nodes):
+                self._push(failure_model.draw_uptime_s(self.rng), FAIL,
+                           ("fail", node))
+
+    # -- plumbing ------------------------------------------------------------
+
+    def _push(self, t: float, prio: int, payload: tuple) -> None:
+        heapq.heappush(self.heap, (t, prio, next(self._seq), payload))
+
+    def _enqueue(self, rec: JobRecord) -> None:
+        rec.state = "queued"
+        # requeued jobs keep their original queue position (submit time)
+        insort(self.queue, rec, key=lambda r: (r.submit_s, r.uid))
+        self.queue_peak = max(self.queue_peak, len(self.queue))
+
+    # -- event handlers ------------------------------------------------------
+
+    def _start(self, rec: JobRecord, pool_chips, t: float) -> None:
+        p = _commit_placement(rec.job, pool_chips, self.penalty, now=t)
+        self.placements.append(p)
+        if rec.start_s is None:
+            rec.start_s = p.start
+        rec.state = "running"
+        self.running[rec.uid] = (p, rec, rec.requeues)
+        self._push(p.end, FINISH, ("finish", rec.uid, rec.requeues))
+
+    def _on_finish(self, uid: int, attempt: int, t: float) -> None:
+        entry = self.running.get(uid)
+        if entry is None or entry[2] != attempt:
+            return                      # stale: this attempt was killed
+        _, rec, _ = self.running.pop(uid)
+        rec.state = COMPLETED
+        rec.end_s = t
+
+    def _on_fail(self, node: int, t: float) -> None:
+        model = self.failure_model
+        up_at = t + model.repair_s
+        self.pool.fail_node(node, t, up_at)
+        self._push(up_at, REPAIR, ("repair", node))
+        self.n_failures += 1
+        self.downtime_s += model.repair_s
+        g = self.topology.gpus_per_node
+        victims = [uid for uid, (p, _, _) in self.running.items()
+                   if any(c // g == node for c in p.chips)]
+        for uid in victims:
+            p, rec, _ = self.running.pop(uid)
+            p.end = t                   # power burned up to the kill stays
+            self.pool.release(p.chips, t)
+            rec.requeues += 1
+            if rec.requeues > self.max_requeues:
+                rec.state = DROPPED
+                rec.end_s = t
+            else:
+                self._enqueue(rec)
+
+    def _on_repair(self, node: int, t: float) -> None:
+        self.pool.repair_node(node, t)
+        self._push(t + self.failure_model.draw_uptime_s(self.rng), FAIL,
+                   ("fail", node))
+
+    # -- dispatcher ----------------------------------------------------------
+
+    def _dispatch(self, t: float) -> None:
+        # FCFS: start queue heads while they fit right now
+        while self.queue:
+            rec = self.queue[0]
+            cand = self.pool.pick_now(self.need[rec.uid], t)
+            if cand is None:
+                break
+            self.queue.pop(0)
+            self._start(rec, cand, t)
+        if not (self.backfill and self.queue):
+            return
+        # conservative (EASY-style) backfill: reserve the blocked head's
+        # earliest projected pool; later jobs may start now only on
+        # chips outside the reservation, or on reserved chips if they
+        # provably finish before the head's start
+        head = self.queue[0]
+        res_pool, t_res = self.pool.earliest_pool(self.need[head.uid])
+        reserved = frozenset(c.chip_id for c in res_pool or ())
+        i = 1
+        while i < len(self.queue):
+            rec = self.queue[i]
+            need = self.need[rec.uid]
+            cand = self.pool.pick_now(need, t, exclude=reserved)
+            if cand is None:
+                cand = self.pool.pick_now(need, t)
+                if cand is not None:
+                    rate = synchronous_rate(
+                        [c.perf_scale for c in cand], self.penalty)
+                    if t + rec.job.work_units / rate > t_res:
+                        cand = None
+            if cand is None:
+                i += 1
+            else:
+                self.queue.pop(i)
+                self._start(rec, cand, t)
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self) -> None:
+        heap = self.heap
+        while heap:
+            if not (self.queue or self.running or self.pending_arrivals):
+                break                   # only failure churn left
+            t = heap[0][0]
+            batch = []
+            while heap and heap[0][0] == t:
+                batch.append(heapq.heappop(heap))
+            for _, _, _, payload in batch:      # (t, prio, seq)-ordered
+                kind = payload[0]
+                if kind == "finish":
+                    self._on_finish(payload[1], payload[2], t)
+                elif kind == "fail":
+                    self._on_fail(payload[1], t)
+                elif kind == "repair":
+                    self._on_repair(payload[1], t)
+                else:                            # arrive
+                    self.pending_arrivals -= 1
+                    self._enqueue(self.records[payload[1]])
+            self._dispatch(t)
+        bad = [r for r in self.records
+               if r.state not in (COMPLETED, DROPPED)]
+        if bad:
+            raise RuntimeError(
+                f"simulation ended with {len(bad)} non-terminal jobs "
+                f"(first: {bad[0].job.name!r} in state {bad[0].state!r}) — "
+                f"event-loop invariant broken")
+
+
+def simulate(arrivals: ArrivalsLike, *,
+             topology: Optional[ClusterTopology] = None,
+             policy: str = "packed",
+             backfill: bool = True,
+             op: Optional[OperatingPoint] = None,
+             power_cap_w: Optional[float] = None,
+             failure_model: Optional[WeibullFailureModel] = None,
+             seed: int = 0,
+             max_requeues: int = 3,
+             multi_gpu_penalty: float = MULTI_GPU_SLOWDOWN,
+             dt_s: float = 5.0,
+             network_w: Optional[float] = None,
+             usd_per_kwh: float = DEFAULT_USD_PER_KWH) -> SimResult:
+    """Run the online simulator and return schedule + trace + stats.
+
+    ``arrivals`` is anything :func:`repro.cluster.events.as_arrivals`
+    accepts: a plain job list (all submitted at t=0 — the batch-oracle
+    case), ``(t, job)`` pairs, or an arrival process
+    (:class:`PoissonArrivals`, :class:`TraceArrivals`).
+
+    ``backfill=False`` is plain FCFS with head-of-line blocking;
+    ``backfill=True`` adds conservative (EASY-style) backfill under the
+    head's reservation.  ``failure_model`` turns on Weibull node
+    failures with requeue (``seed`` drives the draws); jobs are dropped
+    after ``max_requeues`` failure kills.  ``power_cap_w`` derates the
+    operating point down the DPM ladder exactly like the batch
+    scheduler, and the merged trace feeds Green500 L1/L2/L3 unchanged.
+    """
+    arr = as_arrivals(arrivals)
+    if not arr:
+        raise ValueError("empty arrival stream: nothing to simulate")
+    topology = topology or GREEN500_TOPOLOGY
+    sim = _Sim(arr, topology=topology, policy=policy, backfill=backfill,
+               op=op, power_cap_w=power_cap_w, failure_model=failure_model,
+               seed=seed, max_requeues=max_requeues, penalty=multi_gpu_penalty)
+    sim.run()
+
+    schedule = Schedule(sim.placements, sim.op, topology,
+                        derated=sim.derated)
+    schedule.meta["policy"] = policy
+    if network_w is None:
+        network_w = topology.network_w
+    trace = _merged_trace(schedule, dt_s=dt_s, network_w=float(network_w))
+    trace.meta.update(online=True, backfill=backfill,
+                      failures=sim.n_failures)
+    stats = compute_stats(sim.records, sim.placements, trace, topology,
+                          node_failures=sim.n_failures,
+                          node_downtime_s=sim.downtime_s,
+                          queue_peak=sim.queue_peak,
+                          usd_per_kwh=usd_per_kwh)
+    return SimResult(schedule, trace, stats, sim.records)

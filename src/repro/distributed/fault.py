@@ -7,15 +7,63 @@ At 1000+ nodes the failure modes this handles (paper-informed):
   * stragglers          -> per-step wall-time EWMA; persistent outliers
                            trigger the scheduler's frequency-floor plan
                            (the paper's flat-774 profile) or pod drop
+
+The hardware-failure *statistics* live here too:
+:class:`WeibullFailureModel` is the per-node MTBF/repair renewal model
+the discrete-event cluster simulator (:mod:`repro.cluster.sim`) draws
+node outages from, shared with the training-loop planners above so both
+layers agree on what a node-hour of risk means.
 """
 from __future__ import annotations
 
 import math
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class WeibullFailureModel:
+    """Per-node hardware-failure renewal process.
+
+    Uptimes are Weibull-distributed — ``shape < 1`` captures infant
+    mortality, ``shape > 1`` wear-out; HPC node-failure traces typically
+    fit 0.7–1.8 — with the scale chosen so the *mean* uptime equals
+    ``mtbf_s`` (MTBF = scale × Γ(1 + 1/shape)).  Repairs take a fixed
+    ``repair_s`` (reboot + health check), after which the next uptime is
+    drawn afresh (a renewal process, so no horizon needs to be fixed up
+    front — the simulator draws lazily on each repair)."""
+
+    mtbf_s: float = 500.0 * 3600.0     # per-node mean time between failures
+    shape: float = 1.3
+    repair_s: float = 1800.0
+
+    def __post_init__(self):
+        if self.mtbf_s <= 0 or self.shape <= 0 or self.repair_s < 0:
+            raise ValueError("mtbf_s and shape must be positive, "
+                             "repair_s non-negative")
+
+    @property
+    def scale_s(self) -> float:
+        """Weibull scale λ with E[uptime] = ``mtbf_s``."""
+        return self.mtbf_s / math.gamma(1.0 + 1.0 / self.shape)
+
+    def draw_uptime_s(self, rng: np.random.Generator) -> float:
+        """One uptime sample [s] (time from in-service to failure)."""
+        return float(self.scale_s * rng.weibull(self.shape))
+
+    def node_outages(self, rng: np.random.Generator, n_nodes: int,
+                     horizon_s: float) -> Iterator[Tuple[int, float, float]]:
+        """All ``(node, t_down, t_up)`` outages before ``horizon_s`` —
+        the eager counterpart of the simulator's lazy per-repair draws
+        (planning/analysis use)."""
+        for node in range(n_nodes):
+            t = self.draw_uptime_s(rng)
+            while t < horizon_s:
+                yield node, t, t + self.repair_s
+                t += self.repair_s + self.draw_uptime_s(rng)
 
 
 @dataclass

@@ -263,6 +263,46 @@ class TraceRecorder:
         self._t_max = max(self._t_max, float(np.max(t)))
         self._n += n
 
+    def emit_intervals(self, starts, watts: Dict[str, np.ndarray], *,
+                       span: float, dt_s: float, flops_rate=0.0,
+                       **aux) -> None:
+        """Piecewise-constant interval ingestion — the event-driven
+        engines' path.  ``starts`` are non-decreasing interval start
+        times; interval ``i`` spans ``[starts[i], starts[i+1])`` and the
+        last one runs to ``span``.  Component/aux values and
+        ``flops_rate`` are per-interval arrays (or scalars, broadcast).
+
+        The intervals are broadcast onto a fixed ``dt_s`` sample grid
+        over ``[starts[0], span]``: each sample reads the interval it
+        falls in, and the final sample at ``t == span`` reads the last
+        interval's value (the left limit) so the trapezoid energy covers
+        the full span and bills nothing after it."""
+        starts = np.asarray(starts, dtype=float)
+        if starts.ndim != 1 or starts.size == 0:
+            raise ValueError("emit_intervals needs a non-empty 1-D array "
+                             "of interval start times")
+        if np.any(np.diff(starts) < 0.0):
+            raise ValueError("interval starts must be non-decreasing")
+        span = float(span)
+        if span <= starts[0]:
+            raise ValueError(f"span {span} must exceed the first interval "
+                             f"start {starts[0]}")
+        n_int = starts.shape[0]
+
+        def per_interval(v) -> np.ndarray:
+            return np.broadcast_to(np.asarray(v, dtype=float), (n_int,))
+
+        ts = np.arange(starts[0], span, dt_s)
+        if not ts.size or ts[-1] < span:
+            ts = np.append(ts, span)
+        idx = np.searchsorted(starts, np.minimum(ts, span - 1e-9),
+                              side="right") - 1
+        idx = np.clip(idx, 0, n_int - 1)
+        self.emit_series(
+            ts, {k: per_interval(v)[idx] for k, v in watts.items()},
+            flops_rate=per_interval(flops_rate)[idx],
+            **{k: per_interval(v)[idx] for k, v in aux.items()})
+
     def _seal_buffer(self) -> None:
         """Convert the open scalar-append buffer into a sealed chunk."""
         if not self._buf_t:

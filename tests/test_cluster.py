@@ -292,6 +292,36 @@ def test_preferred_op_flows_from_jobs():
     assert res.op.f_mhz == 900.0
 
 
+def test_mixed_preferred_ops_warn_with_dropped_points():
+    # regression: jobs whose preferred_op differs from the batch's first
+    # used to be dropped *silently*; the scheduler must now say which
+    # operating points it discarded
+    jobs = [Job("hpl", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=900.0)),
+            Job("lqcd", 13.0, 1.0,
+                preferred_op=OperatingPoint.green500()),
+            Job("serve", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=655.0))]
+    with pytest.warns(UserWarning, match=r"655 MHz.*774 MHz") as rec:
+        op, derated = Scheduler(
+            ClusterTopology(n_nodes=1)).resolve_operating_point(jobs=jobs)
+    assert op.f_mhz == 900.0 and not derated
+    msg = str(rec[0].message)
+    assert "'lqcd'" in msg and "'serve'" in msg and "900" in msg
+
+
+def test_uniform_preferred_ops_do_not_warn():
+    pref = OperatingPoint(f_mhz=900.0)
+    jobs = [Job(f"j{i}", 13.0, 1.0, preferred_op=pref) for i in range(3)]
+    sched = Scheduler(ClusterTopology(n_nodes=1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        op, _ = sched.resolve_operating_point(jobs=jobs)
+        assert op.f_mhz == 900.0
+        # no preferences at all is silent too
+        op, _ = sched.resolve_operating_point(
+            jobs=[Job("plain", 13.0, 1.0)])
+        assert op == OperatingPoint.green500()
+
+
 # -- Legacy flat API (the core/energy shim keeps these alive) ----------------
 
 def test_legacy_schedule_throughput_still_works():

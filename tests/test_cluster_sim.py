@@ -1,0 +1,339 @@
+"""Online discrete-event cluster simulator: the batch oracle (bit-level
+trace equivalence against ``cluster.run()`` when every arrival is at t=0
+with no failures), seeded determinism, invariant property grids (every
+job terminal, utilization in [0,1], energy above the idle floor, no chip
+double-booked), and the failure/requeue path."""
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterTopology, Job, PoissonArrivals,
+                           TraceArrivals, batch_arrivals, run, simulate)
+from repro.cluster.events import Arrival, as_arrivals
+from repro.distributed.fault import WeibullFailureModel
+from repro.power.layers import NodeModel
+from repro.power.model import OperatingPoint
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+OP = OperatingPoint.green500()
+
+# sim-only annotations the batch trace does not carry
+_SIM_META = ("online", "backfill", "failures")
+
+
+def assert_traces_identical(a, b, *, ignore_meta=()):
+    """Bit-level: every series equal sample-for-sample, no tolerance."""
+    assert np.array_equal(a.t, b.t)
+    assert sorted(a.components) == sorted(b.components)
+    for name in a.components:
+        assert np.array_equal(a.components[name], b.components[name]), name
+    assert np.array_equal(a.flops_rate, b.flops_rate)
+    assert sorted(a.aux) == sorted(b.aux)
+    for name in a.aux:
+        assert np.array_equal(a.aux[name], b.aux[name]), name
+    ma = {k: v for k, v in a.meta.items() if k not in ignore_meta}
+    mb = {k: v for k, v in b.meta.items() if k not in ignore_meta}
+    assert ma == mb
+
+
+def batch_order(jobs):
+    """The batch scheduler's dispatch order (stable sort, widest first) —
+    FCFS replays it exactly when fed jobs in this order at t=0."""
+    return sorted(jobs, key=lambda j: -j.work_units)
+
+
+def assert_no_double_booking(placements, gpus_per_node):
+    per_chip = defaultdict(list)
+    for p in placements:
+        if p.end > p.start:
+            for c in p.chips:
+                per_chip[c].append((p.start, p.end))
+    for chip, spans in per_chip.items():
+        spans.sort()
+        for (s0, e0), (s1, e1) in zip(spans, spans[1:]):
+            assert e0 <= s1 + 1e-9, f"chip {chip} double-booked"
+
+
+# -- the batch oracle --------------------------------------------------------
+#
+# All arrivals at t=0, no failures, FCFS without backfill, jobs pre-sorted
+# in the batch scheduler's dispatch order: the event-driven simulator must
+# book the *same* placements and therefore emit a bit-identical PowerTrace
+# through the same _merged_trace engine.
+
+
+def _oracle_case(topology, jobs, *, policy="packed", dt_s=7.0,
+                 backfill=False, op=OP):
+    jobs = batch_order(jobs)
+    batch = run(jobs, policy=policy, topology=topology, op=op, dt_s=dt_s)
+    sim = simulate(jobs, topology=topology, policy=policy, op=op,
+                   dt_s=dt_s, backfill=backfill)
+    assert_traces_identical(sim.trace, batch.trace, ignore_meta=_SIM_META)
+    assert sim.trace.meta["online"] is True
+    assert sim.makespan == batch.schedule.makespan
+    return sim
+
+
+def test_oracle_uniform_batch():
+    top = ClusterTopology(n_nodes=4)
+    jobs = [Job(f"lat{i}", 13.0, 600.0) for i in range(top.n_chips)]
+    sim = _oracle_case(top, jobs, dt_s=30.0)
+    assert sim.stats.jobs_completed == len(jobs)
+    assert sim.stats.utilization == pytest.approx(1.0)
+
+
+def test_oracle_queued_mixed_durations():
+    rng = np.random.default_rng(0)
+    top = ClusterTopology(n_nodes=3)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(50.0, 700.0)))
+            for i in range(40)]
+    _oracle_case(top, jobs)
+
+
+def test_oracle_round_robin_sharded():
+    rng = np.random.default_rng(1)
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(100.0, 500.0)))
+            for i in range(10)]
+    sim = _oracle_case(top, jobs, policy="round_robin", dt_s=11.0)
+    assert all(p.sharded for p in sim.schedule.placements)
+
+
+def test_oracle_heterogeneous_perf_scales():
+    top = ClusterTopology(n_nodes=2,
+                          perf_scales=(1.0, 1.0, 0.9, 0.9,
+                                       0.8, 0.8, 1.0, 0.9))
+    jobs = [Job(f"j{i}", 13.0, 400.0 + 37.0 * i) for i in range(12)]
+    _oracle_case(top, jobs)
+
+
+def test_oracle_single_job():
+    sim = _oracle_case(ClusterTopology(n_nodes=1),
+                       [Job("solo", 13.0, 123.0)], dt_s=5.0)
+    assert sim.stats.jobs_submitted == 1
+
+
+def test_oracle_backfill_single_width_batch():
+    # with uniform single-chip jobs at t=0 backfill never finds a hole
+    # (the head is only ever blocked when nothing is free), so the
+    # backfill dispatcher must also replay the batch booking exactly
+    rng = np.random.default_rng(2)
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(60.0, 500.0)))
+            for i in range(24)]
+    _oracle_case(top, jobs, backfill=True)
+
+
+def test_arrival_normalization_forms_agree():
+    jobs = batch_order([Job(f"j{i}", 13.0, 100.0 + i) for i in range(6)])
+    top = ClusterTopology(n_nodes=1)
+    a = simulate(jobs, topology=top, op=OP, backfill=False)
+    b = simulate(batch_arrivals(jobs), topology=top, op=OP, backfill=False)
+    c = simulate(TraceArrivals([(0.0, j) for j in jobs]), topology=top,
+                 op=OP, backfill=False)
+    assert_traces_identical(a.trace, b.trace)
+    assert_traces_identical(a.trace, c.trace)
+    assert as_arrivals(jobs) == [Arrival(0.0, j) for j in jobs]
+
+
+# -- determinism -------------------------------------------------------------
+
+
+def _poisson_case(seed):
+    rng = np.random.default_rng(3)
+    jobs = [Job(f"j{i}", 13.0 if i % 4 else 52.0,
+                float(rng.uniform(600.0, 3600.0))) for i in range(60)]
+    arr = PoissonArrivals(jobs, rate_per_s=1 / 120.0, seed=7)
+    fm = WeibullFailureModel(mtbf_s=4 * 3600.0, repair_s=1800.0)
+    return simulate(arr, topology=ClusterTopology(n_nodes=4), op=OP,
+                    dt_s=60.0, failure_model=fm, seed=seed)
+
+
+def test_same_seed_replays_exactly():
+    a, b = _poisson_case(5), _poisson_case(5)
+    assert_traces_identical(a.trace, b.trace)
+    assert a.stats == b.stats
+    assert [(p.start, p.end, p.chips) for p in a.schedule.placements] == \
+           [(p.start, p.end, p.chips) for p in b.schedule.placements]
+
+
+def test_different_seed_diverges():
+    a, b = _poisson_case(5), _poisson_case(6)
+    # different failure draws must change the executed schedule
+    assert (a.stats.node_failures != b.stats.node_failures
+            or not np.array_equal(a.trace.power_w, b.trace.power_w))
+
+
+def test_poisson_arrivals_seeded():
+    jobs = [Job(f"j{i}", 13.0, 60.0) for i in range(10)]
+    t1 = [a.t for a in PoissonArrivals(jobs, 0.01, seed=1).arrivals()]
+    t2 = [a.t for a in PoissonArrivals(jobs, 0.01, seed=1).arrivals()]
+    t3 = [a.t for a in PoissonArrivals(jobs, 0.01, seed=2).arrivals()]
+    assert t1 == t2 and t1 != t3
+    assert all(b > a for a, b in zip(t1, t1[1:]))
+
+
+# -- invariant property grid -------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_nodes=st.integers(1, 4),
+       n_jobs=st.integers(1, 30),
+       rate_scale=st.floats(0.2, 3.0),
+       backfill=st.booleans(),
+       fail=st.booleans())
+def test_sim_invariants(n_nodes, n_jobs, rate_scale, backfill, fail):
+    rng = np.random.default_rng(n_jobs * 7 + n_nodes)
+    jobs = [Job(f"j{i}", 52.0 if i % 5 == 4 else 13.0,
+                float(rng.uniform(120.0, 1800.0))) for i in range(n_jobs)]
+    arr = PoissonArrivals(jobs, rate_per_s=rate_scale / 300.0, seed=n_jobs)
+    top = ClusterTopology(n_nodes=n_nodes)
+    fm = WeibullFailureModel(mtbf_s=40 * 3600.0, repair_s=900.0) \
+        if fail else None
+    res = simulate(arr, topology=top, op=OP, dt_s=45.0, backfill=backfill,
+                   failure_model=fm, seed=n_jobs + 1)
+
+    # every job terminal
+    assert all(r.state in ("completed", "dropped") for r in res.records)
+    assert res.stats.jobs_completed + res.stats.jobs_dropped == n_jobs
+    # utilization is a fraction of capacity
+    assert 0.0 <= res.stats.utilization <= 1.0 + 1e-9
+    # no chip serves two placements at once
+    assert_no_double_booking(res.schedule.placements, top.gpus_per_node)
+    # waits are non-negative and the trace spans the makespan
+    assert all(r.wait_s is None or r.wait_s >= -1e-9 for r in res.records)
+    assert res.trace.t[-1] == pytest.approx(res.makespan)
+    # energy can never dip below the always-on idle floor
+    idle_w = (NodeModel().power(OP, load=0.0) * n_nodes
+              + top.network_w)
+    assert res.stats.energy_j >= idle_w * res.trace.duration * (1 - 1e-9)
+    assert res.stats.cost_usd == pytest.approx(
+        res.stats.energy_kwh * res.stats.usd_per_kwh)
+
+
+# -- failures & requeue ------------------------------------------------------
+
+
+def test_failure_truncates_and_requeues():
+    # one long job on a 1-node cluster with an aggressive failure clock:
+    # the first attempt must be cut short, the job requeued and finished
+    fm = WeibullFailureModel(mtbf_s=1200.0, shape=1.0, repair_s=300.0)
+    jobs = [Job("hero", 13.0, 3600.0)]
+    res = simulate(jobs, topology=ClusterTopology(n_nodes=1), op=OP,
+                   dt_s=30.0, failure_model=fm, seed=0, max_requeues=50)
+    assert res.stats.node_failures >= 1
+    assert res.stats.requeues >= 1
+    rec = res.records[0]
+    assert rec.state == "completed"
+    # one truncated attempt per requeue plus the final full run
+    attempts = [p for p in res.schedule.placements]
+    assert len(attempts) == rec.requeues + 1
+    full = res.records[0].job.work_units  # seconds at perf_scale 1.0
+    assert sum(p.end - p.start for p in attempts) > full
+
+    # the trace still accounts for power burned by the killed attempts
+    assert res.stats.energy_j > 0.0
+    assert res.stats.node_downtime_s == pytest.approx(
+        res.stats.node_failures * fm.repair_s)
+
+
+def test_requeue_budget_drops_job():
+    fm = WeibullFailureModel(mtbf_s=600.0, shape=1.0, repair_s=60.0)
+    jobs = [Job("doomed", 13.0, 50000.0)]
+    res = simulate(jobs, topology=ClusterTopology(n_nodes=1), op=OP,
+                   dt_s=300.0, failure_model=fm, seed=1, max_requeues=2)
+    assert res.records[0].state == "dropped"
+    assert res.stats.jobs_dropped == 1
+    assert res.records[0].requeues == 3      # budget + the fatal one
+
+
+def test_weibull_model_statistics():
+    fm = WeibullFailureModel(mtbf_s=1000.0, shape=1.3)
+    rng = np.random.default_rng(0)
+    draws = [fm.draw_uptime_s(rng) for _ in range(4000)]
+    assert np.mean(draws) == pytest.approx(1000.0, rel=0.05)
+    outages = list(fm.node_outages(np.random.default_rng(1), 3, 5000.0))
+    assert all(t_up == t_down + fm.repair_s for _, t_down, t_up in outages)
+    assert all(0 <= node < 3 for node, _, _ in outages)
+    with pytest.raises(ValueError):
+        WeibullFailureModel(mtbf_s=-1.0)
+
+
+# -- backfill ----------------------------------------------------------------
+
+
+def _mixed_width_stream(n_nodes=4, n_jobs=80):
+    rng = np.random.default_rng(8)
+    jobs = [Job(f"j{i}", 52.0 if i % 3 == 0 else 13.0,
+                float(rng.uniform(300.0, 2400.0))) for i in range(n_jobs)]
+    return PoissonArrivals(jobs, rate_per_s=1 / 40.0, seed=9), \
+        ClusterTopology(n_nodes=n_nodes)
+
+
+def test_backfill_beats_fcfs_utilization():
+    arr, top = _mixed_width_stream()
+    fcfs = simulate(arr, topology=top, op=OP, dt_s=60.0, backfill=False)
+    easy = simulate(arr, topology=top, op=OP, dt_s=60.0, backfill=True)
+    assert easy.stats.utilization > fcfs.stats.utilization
+    assert easy.makespan <= fcfs.makespan
+
+
+def test_backfill_never_delays_the_head():
+    # conservative rule: job-by-job, each head's start under backfill is
+    # no later than under plain FCFS
+    arr, top = _mixed_width_stream(n_nodes=2, n_jobs=40)
+    fcfs = simulate(arr, topology=top, op=OP, dt_s=60.0, backfill=False)
+    easy = simulate(arr, topology=top, op=OP, dt_s=60.0, backfill=True)
+    f_start = {r.job.name: r.start_s for r in fcfs.records}
+    for r in easy.records:
+        assert r.start_s <= f_start[r.job.name] + 1e-6, r.job.name
+
+
+# -- long stochastic sweeps (tier-2; run with `pytest -m slow`) --------------
+
+
+@pytest.mark.slow
+def test_week_of_lcsc_operation_is_interactive():
+    import time
+
+    rng = np.random.default_rng(10)
+    jobs = [Job(f"j{i}", 52.0 if i % 5 == 0 else 13.0,
+                float(rng.uniform(1800.0, 4 * 3600.0)))
+            for i in range(3000)]
+    arr = PoissonArrivals(jobs, rate_per_s=1 / 200.0, seed=11)
+    fm = WeibullFailureModel(mtbf_s=1000.0 * 3600.0, repair_s=2 * 3600.0)
+    t0 = time.perf_counter()
+    res = simulate(arr, topology=ClusterTopology(n_nodes=160), op=OP,
+                   dt_s=60.0, failure_model=fm, seed=12)
+    wall = time.perf_counter() - t0
+    assert wall < 10.0, f"160-node week took {wall:.1f}s"
+    assert res.stats.jobs_completed + res.stats.jobs_dropped == 3000
+    assert res.makespan > 6 * 24 * 3600.0     # a week-scale horizon
+    # power never exceeds the all-nodes-flat-out envelope
+    env = NodeModel().power(OP) * 160 + ClusterTopology(
+        n_nodes=160).network_w
+    assert float(np.max(res.trace.power_w)) <= env * (1 + 1e-9)
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 24))
+def test_sim_invariants_wide_sweep(seed):
+    rng = np.random.default_rng(seed)
+    n_jobs = 20 + seed * 3
+    jobs = [Job(f"j{i}", 52.0 if i % 4 == 0 else 13.0,
+                float(rng.uniform(60.0, 3600.0))) for i in range(n_jobs)]
+    arr = PoissonArrivals(jobs, rate_per_s=1 / 60.0, seed=seed)
+    top = ClusterTopology(n_nodes=1 + seed % 6)
+    fm = WeibullFailureModel(mtbf_s=(10 + seed) * 3600.0, repair_s=600.0)
+    res = simulate(arr, topology=top, op=OP, dt_s=120.0,
+                   failure_model=fm, seed=seed, backfill=bool(seed % 2))
+    assert all(r.state in ("completed", "dropped") for r in res.records)
+    assert 0.0 <= res.stats.utilization <= 1.0 + 1e-9
+    assert_no_double_booking(res.schedule.placements, top.gpus_per_node)
