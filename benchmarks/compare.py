@@ -1,0 +1,177 @@
+"""Benchmark perf-regression gate: compare a ``benchmarks.run --json``
+summary against the committed baseline.
+
+Two regression classes, each reported as a machine-readable
+``REGRESSION:<table>:<detail>`` line on stdout (CI greps for the
+prefix; the exit code gates the job):
+
+* **wall time** — a table's ``seconds`` exceeding ``--time-factor``
+  (default 2.5×) of the baseline.  Sub-``MIN_BASE_SECONDS`` baselines
+  are floored first so micro-tables can't trip the gate on noise.
+* **gated values** — a numeric field in a row's ``derived`` string
+  (``k=v;...``) drifting beyond ``--rel-tol`` from the baseline, a
+  baseline row/table missing from the current run, or a table that
+  errored.  Timing-derived fields (measured GFLOPS, wall seconds,
+  speedups, per-call latencies) are exempt — they are what the *time*
+  gate covers; the value gate pins the deterministic model-derived
+  numbers the paper-claims asserts gate on.
+
+New tables/rows in the current run are fine (that's how benches land).
+
+Usage::
+
+    python -m benchmarks.compare BASELINE CURRENT [--report PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+# Baselines shorter than this are all harness noise; the time gate
+# compares against max(baseline, floor).
+MIN_BASE_SECONDS = 0.05
+
+# derived-string fields that restate measured wall time / throughput and
+# therefore vary run to run: the time gate owns these, not the value gate
+_SKIP_KEYS = re.compile(
+    r"(_s$|^us_|_us$|^speedup$|gflops|^tuned$|^ref$|^best_us$|^wall)")
+
+# numeric token: int/float/scientific, optional %, possibly prefixed with
+# non-numeric unit text being part of the value (e.g. "57.13kW" keeps 57.13)
+_NUM = re.compile(r"^[-+]?\d+\.?\d*(?:[eE][-+]?\d+)?%?$")
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    """``"kw=57.13;paper=57.2;clocks=774+900"`` → field dict.  Fields
+    without ``=`` (rare) are ignored."""
+    out: Dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def _as_number(v: str) -> Optional[float]:
+    if not _NUM.match(v):
+        return None
+    return float(v[:-1]) / 100.0 if v.endswith("%") else float(v)
+
+
+def compare_derived(base: str, cur: str, rel_tol: float) -> List[str]:
+    """Field-level drift between two derived strings; returns problem
+    descriptions (empty = within tolerance)."""
+    problems: List[str] = []
+    bf, cf = parse_derived(base), parse_derived(cur)
+    for key, bval in bf.items():
+        if _SKIP_KEYS.search(key):
+            continue
+        if key not in cf:
+            problems.append(f"field {key!r} disappeared")
+            continue
+        bnum, cnum = _as_number(bval), _as_number(cf[key])
+        if bnum is None or cnum is None:
+            if bval != cf[key]:
+                problems.append(f"{key}={cf[key]!r} (baseline {bval!r})")
+            continue
+        scale = max(abs(bnum), 1e-12)
+        if abs(cnum - bnum) / scale > rel_tol:
+            problems.append(f"{key}={cnum:g} drifted from baseline "
+                            f"{bnum:g} (>{rel_tol:.0%})")
+    return problems
+
+
+def compare(baseline: dict, current: dict, *, time_factor: float = 2.5,
+            rel_tol: float = 0.01) -> Tuple[List[str], dict]:
+    """All regressions of ``current`` against ``baseline`` as
+    ``REGRESSION:<table>:<detail>`` lines, plus a report dict."""
+    regressions: List[str] = []
+    report: dict = {"tables": {}, "time_factor": time_factor,
+                    "rel_tol": rel_tol}
+
+    def flag(table: str, detail: str) -> None:
+        regressions.append(f"REGRESSION:{table}:{detail}")
+
+    for table, base in sorted(baseline.items()):
+        entry: dict = {"status": "ok"}
+        report["tables"][table] = entry
+        cur = current.get(table)
+        if cur is None:
+            entry["status"] = "missing"
+            flag(table, "table missing from current run")
+            continue
+        if "error" in cur:
+            entry["status"] = "error"
+            flag(table, f"errored: {cur['error']}")
+            continue
+        if "error" in base:          # baseline must never carry failures
+            entry["status"] = "bad-baseline"
+            flag(table, "baseline recorded an error for this table — "
+                        "regenerate the baseline")
+            continue
+
+        base_s = max(float(base.get("seconds", 0.0)), MIN_BASE_SECONDS)
+        cur_s = float(cur.get("seconds", 0.0))
+        entry["seconds"] = {"baseline": base_s, "current": cur_s}
+        if cur_s > time_factor * base_s:
+            entry["status"] = "slow"
+            flag(table, f"time {cur_s:.3f}s > {time_factor:g}x baseline "
+                        f"{base_s:.3f}s")
+
+        cur_rows = cur.get("value", {})
+        for row, bdata in base.get("value", {}).items():
+            cdata = cur_rows.get(row)
+            if cdata is None:
+                entry["status"] = "drift"
+                flag(table, f"row {row!r} missing from current run")
+                continue
+            for problem in compare_derived(bdata.get("derived", ""),
+                                           cdata.get("derived", ""),
+                                           rel_tol):
+                entry["status"] = "drift"
+                flag(table, f"{row}: {problem}")
+    return regressions, report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="fresh benchmarks.run --json output")
+    ap.add_argument("--time-factor", type=float, default=2.5,
+                    help="wall-time regression threshold (default 2.5x)")
+    ap.add_argument("--rel-tol", type=float, default=0.01,
+                    help="relative drift tolerance for gated numeric "
+                         "fields (default 1%%)")
+    ap.add_argument("--report", default=None, metavar="PATH",
+                    help="write the comparison report JSON here")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions, report = compare(baseline, current,
+                                  time_factor=args.time_factor,
+                                  rel_tol=args.rel_tol)
+    report["regressions"] = regressions
+    if args.report:
+        with open(args.report, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    for line in regressions:
+        print(line)
+    if regressions:
+        print(f"# {len(regressions)} regression(s) against {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"# no regressions: {len(baseline)} baseline tables within "
+          f"{args.time_factor:g}x time / {args.rel_tol:.0%} value drift")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -569,6 +569,82 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+# -- §1–2: heterogeneous per-node operating points ----------------------------
+
+def cluster_hetero() -> List[Row]:
+    """The paper's headline is a *mixed-frequency* cluster story: each
+    workload at its own optimal point — 774 MHz for the Green500 LQCD
+    run, higher clocks when Linpack throughput matters.  Gates: (1) a
+    mixed HPL@900 + LQCD@774 batch beats the same batch forced to either
+    single point on combined MFLOPS/W; (2) the vectorized heterogeneous
+    trace is bit-identical to the per-tick loop oracle; (3) the 56-node
+    Green500 record batch still reproduces the published 57.13 kW."""
+    from repro.cluster import ClusterTopology, Job, run
+    from repro.cluster.run import _merged_trace_reference
+    from repro.power import OperatingPoint
+
+    rows: List[Row] = []
+    op774 = OperatingPoint.green500()
+    op900 = OperatingPoint(f_mhz=900.0)
+    top = ClusterTopology(n_nodes=56)
+
+    # 8 node-wide HPL jobs (throughput mode: 900 MHz) + 192 one-per-GPU
+    # LQCD lattices at the efficiency point fill all 56 nodes
+    jobs = [Job(f"hpl{i}", 52.0, 1800.0, preferred_op=op900, kind="hpl")
+            for i in range(8)]
+    jobs += [Job(f"lat{i}", 13.0, 480.0, preferred_op=op774, kind="lqcd")
+             for i in range(192)]
+
+    t0 = time.time()
+    mixed = run(jobs, policy="packed", topology=top, dt_s=30.0)
+    mixed_us = (time.time() - t0) * 1e6
+    assert {p.op.f_mhz for p in mixed.schedule.placements} == {774.0, 900.0}
+    assert mixed.trace.meta["heterogeneous"]
+
+    # vectorized heterogeneous trace == per-tick loop oracle, bit-level
+    ref = _merged_trace_reference(mixed.schedule, dt_s=30.0,
+                                  network_w=float(top.network_w))
+    assert np.array_equal(mixed.trace.t, ref.t)
+    for name in mixed.trace.components:
+        assert np.array_equal(mixed.trace.components[name],
+                              ref.components[name]), \
+            f"hetero {name} series diverged from the loop oracle"
+    assert np.array_equal(mixed.trace.flops_rate, ref.flops_rate)
+
+    # per-workload DVFS beats both homogeneous points on MFLOPS/W: 774
+    # everywhere stalls HPL (longer makespan, same idle overheads), 900
+    # everywhere burns watts the memory-bound lattices can't use
+    eff_mixed = mixed.efficiency(3).mflops_per_w
+    all774 = run(jobs, topology=top, op=op774, dt_s=30.0)
+    all900 = run(jobs, topology=top, op=op900, dt_s=30.0)
+    eff_774 = all774.efficiency(3).mflops_per_w
+    eff_900 = all900.efficiency(3).mflops_per_w
+    assert eff_mixed > eff_774, "mixed batch must beat uniform 774 MHz"
+    assert eff_mixed > eff_900, "mixed batch must beat uniform 900 MHz"
+    assert mixed.makespan < all774.makespan        # HPL unstalled
+
+    # the Green500 record batch is untouched by the heterogeneous
+    # machinery: still the published 57.13 kW, now to 0.2%
+    lat56 = [Job(f"lat{i}", 13.0, 1800.0) for i in range(top.n_chips)]
+    record = run(lat56, policy="packed", topology=top, op=op774, dt_s=30.0)
+    p_kw = float(np.mean(record.trace.power_w)) / 1e3
+    assert abs(p_kw - 57.13) / 57.13 < 0.002, \
+        f"Green500 record batch drifted to {p_kw:.3f} kW"
+
+    rows.append(("hetero/mixed_56", mixed_us,
+                 f"mflops_w={eff_mixed:.1f};clocks=774+900;"
+                 f"makespan={mixed.makespan:.0f}"))
+    rows.append(("hetero/uniform_774", 0.0,
+                 f"mflops_w={eff_774:.1f};makespan={all774.makespan:.0f};"
+                 f"mixed_gain={eff_mixed / eff_774 - 1:.1%}"))
+    rows.append(("hetero/uniform_900", 0.0,
+                 f"mflops_w={eff_900:.1f};makespan={all900.makespan:.0f};"
+                 f"mixed_gain={eff_mixed / eff_900 - 1:.1%}"))
+    rows.append(("hetero/green500_record", 0.0,
+                 f"kw={p_kw:.2f};paper=57.13"))
+    return rows
+
+
 # -- §1: CG energy-to-solution, plain vs even-odd mixed-precision -------------
 
 def cg_energy_to_solution() -> List[Row]:

@@ -61,6 +61,32 @@ class AnalyticNodeHPLModel:
         return evaluate_operating_point(op, node)
 
 
+# Process-level cache for the scheduler's placement-time consult: the
+# coordinate-descent search over the analytic node model is deterministic
+# (it rediscovers the paper's 774 MHz / VID-floor / 40%-fan Green500
+# point), so one search amortizes over every schedule() call.
+_RECOMMENDED_OP: Optional[OperatingPoint] = None
+
+
+def recommended_operating_point() -> OperatingPoint:
+    """The autotuner cost model's operating-point pick, as an
+    :class:`~repro.power.model.OperatingPoint`.
+
+    This is what :meth:`repro.cluster.scheduler.Scheduler.schedule`
+    consults at placement time for jobs that carry no ``preferred_op``:
+    a coordinate-descent search of :class:`AnalyticNodeHPLModel` under
+    the published perf floor — the same search
+    ``benchmarks/paper_tables.py::autotune_operating_point`` gates, so
+    the recommendation *is* the Green500 record point rather than a
+    hard-coded constant.  Cached per process (the search is ~0.3 s)."""
+    global _RECOMMENDED_OP
+    if _RECOMMENDED_OP is None:
+        from repro.autotune import tune_operating_point
+        res = tune_operating_point(method="coordinate")
+        _RECOMMENDED_OP = OperatingPoint.from_point(res.best.point)
+    return _RECOMMENDED_OP
+
+
 @dataclass(frozen=True)
 class AnalyticHPLBlockingModel:
     """Blocking/lookahead tuning for an actual ``linpack_run`` problem

@@ -53,17 +53,30 @@ class ClusterRunResult:
         return measure_efficiency(self.trace, level)
 
 
-def _chip_rates(schedule: Schedule):
+def _op_table(schedule: Schedule):
     """Per-chip power/rate scaffolding shared by the vectorized engine
-    and the loop oracle: (NodeModel, w_busy, w_idle, chip_peak_gflops)."""
+    and the loop oracle: ``(node, w_busy, w_idle, chip_peak_gflops)``
+    where ``w_busy`` maps every distinct placement operating point (plus
+    the schedule reference) to its busy-chip watts — the per-bin lookup
+    table the heterogeneous trace indexes into.
+
+    ``chip_peak_gflops`` is anchored at the *fixed* Green500 reference
+    point, not ``schedule.op``: ``Placement.rate_per_chip`` already
+    carries each job's clock-for-perf scaling (``op_rate_scale``), so a
+    compute-bound placement at 900 MHz produces exactly the engine's
+    900 MHz peak, while the delivered FLOPS of a memory-bound job is
+    invariant to the clock it happens to run at — the paper's thesis."""
     from repro.power.engine import node_hpl_gflops
     from repro.power.layers import NodeModel
 
     node = NodeModel()
     gpu = node.gpus[0]
-    op = schedule.op
-    return (node, gpu.power(op, load=1.0), gpu.power(op, load=0.0),
-            node_hpl_gflops(op, node) / schedule.topology.gpus_per_node)
+    ref = schedule.op
+    ops = {ref} | {p.op for p in schedule.placements if p.op is not None}
+    w_busy = {o: gpu.power(o, load=1.0) for o in ops}
+    return (node, w_busy, gpu.power(ref, load=0.0),
+            node_hpl_gflops(OperatingPoint.green500(), node)
+            / schedule.topology.gpus_per_node)
 
 
 def _sample_grid(span: float, dt_s: float) -> np.ndarray:
@@ -79,11 +92,15 @@ def _sample_grid(span: float, dt_s: float) -> np.ndarray:
 
 def _stamp_cluster_meta(trace: PowerTrace, schedule: Schedule) -> None:
     op = schedule.op
+    clocks = sorted({(p.op or op).f_mhz for p in schedule.placements}
+                    | {op.f_mhz})
     trace.meta.update(
         n_nodes=schedule.topology.n_nodes,
         policy=schedule.meta.get("policy", ""),
         operating_point={"f_mhz": op.f_mhz, "vid": op.vid, "fan": op.fan,
-                         "nb": op.nb, "lookahead": op.lookahead})
+                         "nb": op.nb, "lookahead": op.lookahead},
+        placement_clocks_mhz=clocks,
+        heterogeneous=len(clocks) > 1)
 
 
 def _merged_trace(schedule: Schedule, *, dt_s: float,
@@ -97,10 +114,16 @@ def _merged_trace(schedule: Schedule, *, dt_s: float,
     so each distinct occupancy interval is evaluated **once** through
     the batched layer API and then broadcast onto the ``dt_s`` grid —
     sample-for-sample (bit-level) identical to the per-tick loop oracle
-    :func:`_merged_trace_reference`."""
+    :func:`_merged_trace_reference`.
+
+    Heterogeneous batches: each placement stamps its own operating
+    point's busy watts (from the shared per-op lookup table) onto its
+    chips, so one interval matrix carries e.g. 900 MHz HPL nodes next
+    to 774 MHz LQCD nodes; idle chips and the node's host/fan/PSU
+    composition stay at the schedule reference point."""
     top = schedule.topology
     op = schedule.op
-    node, w_busy, w_idle, chip_peak_gflops = _chip_rates(schedule)
+    node, w_busy, w_idle, chip_peak_gflops = _op_table(schedule)
     g = top.gpus_per_node
     n_chips = top.n_chips
 
@@ -118,21 +141,23 @@ def _merged_trace(schedule: Schedule, *, dt_s: float,
     starts = np.array(sorted(e for e in events if 0.0 <= e < span))
     n_int = starts.shape[0]
 
-    # -- per-chip piecewise-constant occupancy / flops-rate matrices.
-    #    Later placements overwrite earlier ones on a shared chip,
-    #    matching Schedule.active_chips' last-wins dict semantics.
+    # -- per-chip piecewise-constant occupancy / watts / flops-rate
+    #    matrices.  Later placements overwrite earlier ones on a shared
+    #    chip, matching Schedule.active_chips' last-wins dict semantics;
+    #    each placement writes its own op's busy watts.
     active = np.zeros((n_int, n_chips), dtype=bool)
     rate = np.zeros((n_int, n_chips))
+    chip_w = np.full((n_int, n_chips), w_idle)
     for p in live:
         s = int(np.searchsorted(starts, p.start, side="left"))
         e = int(np.searchsorted(starts, p.end, side="left"))
         active[s:e, p.chips] = True
         rate[s:e, p.chips] = chip_peak_gflops * p.rate_per_chip
+        chip_w[s:e, p.chips] = w_busy[p.op or op]
 
     # -- one batched layer evaluation per interval: per-node GPU DC draw
     #    (summed over the chip axis exactly like the scalar API sums its
     #    per-chip overrides), then the node composition elementwise
-    chip_w = np.where(active, w_busy, w_idle)
     gpu_dc = np.sum(chip_w.reshape(n_int, top.n_nodes, g), axis=2)
     per_node = node.component_watts_series(op, gpu_dc=gpu_dc)
     watts_int = {name: np.sum(w, axis=1) for name, w in per_node.items()}
@@ -162,10 +187,12 @@ def _merged_trace_reference(schedule: Schedule, *, dt_s: float,
 
     Per-tick values are accumulated into per-node/per-chip arrays and
     reduced with ``np.sum`` so the float association matches the
-    vectorized engine's axis reductions bit-for-bit."""
+    vectorized engine's axis reductions bit-for-bit.  Per-placement
+    operating points read the same busy-watts lookup table the
+    vectorized engine indexes, chip by chip."""
     top = schedule.topology
     op = schedule.op
-    node, w_busy, w_idle, chip_peak_gflops = _chip_rates(schedule)
+    node, w_busy, w_idle, chip_peak_gflops = _op_table(schedule)
     g = top.gpus_per_node
 
     span = schedule.makespan or dt_s
@@ -181,7 +208,8 @@ def _merged_trace_reference(schedule: Schedule, *, dt_s: float,
             overrides = []
             for c in range(n * g, (n + 1) * g):
                 p = active.get(c)
-                overrides.append(w_busy if p is not None else w_idle)
+                overrides.append(w_busy[p.op or op] if p is not None
+                                 else w_idle)
                 if p is not None:
                     f_chip[c] = chip_peak_gflops * p.rate_per_chip
                     busy += 1
@@ -212,26 +240,26 @@ def run(workloads: Sequence[Union[Workload, Job]], *,
     and contributes a :class:`WorkloadResult`) and bare :class:`Job`
     specs (placed and power-modeled only — the cluster-scale path).
 
-    ``op`` defaults to the first job's ``preferred_op`` (falling back to
-    the Green500 point); a ``power_cap_w`` may derate it down the DPM
+    Each job's operating point is resolved individually (explicit ``op``
+    override → the job's ``preferred_op`` → the autotuner cost model's
+    recommendation); a ``power_cap_w`` derates each point down the DPM
     ladder.  The merged cluster trace carries component watts for every
-    node — busy or idle — plus the separately-metered switches.
+    node — busy or idle — plus the separately-metered switches, pricing
+    each placement at its own point.
     """
     if not workloads:
         raise ValueError("empty workload batch: nothing to run "
                          "(Scheduler.schedule accepts an empty job list "
                          "if you only need a placement)")
     jobs: List[Job] = []
-    adapters: List[Workload] = []
+    adapters: List[tuple] = []            # (workload, its job spec)
     for w in workloads:
         if isinstance(w, Job):
             jobs.append(w)
         else:
-            jobs.append(w.job())
-            adapters.append(w)
-    # op defaults to the first job's preferred_op inside
-    # Scheduler.resolve_operating_point (which also warns when other
-    # jobs' preferred points have to be dropped)
+            job = w.job()
+            jobs.append(job)
+            adapters.append((w, job))
 
     sched = Scheduler(topology, policy=policy, power_cap_w=power_cap_w)
     schedule = sched.schedule(jobs, op=op)
@@ -244,6 +272,10 @@ def run(workloads: Sequence[Union[Workload, Job]], *,
 
     results: List[WorkloadResult] = []
     if execute:
-        for wl in adapters:
-            results.append(wl.execute(schedule.op))
+        # each adapter runs at the point its placement resolved to —
+        # the same object identity the scheduler placed
+        op_by_job = {id(p.job): p.op for p in schedule.placements}
+        for wl, job in adapters:
+            results.append(wl.execute(op_by_job.get(id(job))
+                                      or schedule.op))
     return ClusterRunResult(schedule, trace, results)

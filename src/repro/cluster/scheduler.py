@@ -23,7 +23,6 @@ dropping) ride along unchanged.
 from __future__ import annotations
 
 import math
-import warnings
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -78,6 +77,7 @@ class Placement:
     sharded: bool
     nodes: Tuple[int, ...] = ()
     rate_per_chip: float = 1.0   # effective work rate per chip (ref = 1.0)
+    op: Optional[OperatingPoint] = None   # per-job point; None = schedule ref
 
 
 @dataclass(frozen=True)
@@ -151,26 +151,73 @@ def synchronous_rate(perf_scales: Sequence[float],
     return len(scales) * min(scales) * (1.0 - penalty)
 
 
+# Workload kinds whose runtime the paper measures as clock-insensitive
+# (LQCD: <1.5% across the DPM ladder — memory-bound); everything else
+# (HPL, generic compute) scales with the engine's HPL perf curve.
+MEMORY_BOUND_KINDS = frozenset({"lqcd", "serve", "synthetic"})
+
+_RATE_SCALE_CACHE: Dict[OperatingPoint, float] = {}
+
+
+def op_rate_scale(job: Job, op: Optional[OperatingPoint]) -> float:
+    """Work-rate multiplier for running ``job`` at ``op`` instead of the
+    Green500 reference point ``Job.work_units`` is calibrated against.
+
+    Memory-bound kinds run at 1.0 regardless of clock (the paper's LQCD
+    thesis); compute-bound kinds scale by the engine's node-HPL perf at
+    ``op`` over the same figure at the reference — so a 900 MHz HPL
+    placement finishes in the published clock-for-perf ratio.  Exactly
+    1.0 at the reference point itself, keeping pre-heterogeneous
+    schedules bit-identical."""
+    ref = OperatingPoint.green500()
+    if op is None or op == ref or job.kind in MEMORY_BOUND_KINDS:
+        return 1.0
+    scale = _RATE_SCALE_CACHE.get(op)
+    if scale is None:
+        from repro.power.engine import node_hpl_gflops
+        scale = node_hpl_gflops(op) / node_hpl_gflops(ref)
+        _RATE_SCALE_CACHE[op] = scale
+    return scale
+
+
 def _commit_placement(job: Job, pool: List[Chip],
                       penalty: float, *,
-                      now: Optional[float] = None) -> Placement:
+                      now: Optional[float] = None,
+                      op: Optional[OperatingPoint] = None) -> Placement:
     """Book ``job`` onto ``pool``: earliest common start, synchronous-step
     pacing, busy_until advanced on every chip.  The one placement
     definition the Scheduler, the online simulator, and the legacy flat
     API all use.  ``now`` clamps the start to the current simulation
     time (an online dispatch can't start in the past); the batch path
-    leaves it unset."""
+    leaves it unset.  ``op`` is the job's resolved operating point: it
+    both rides on the placement (the trace engine prices each interval
+    at its placement's point) and paces the work via
+    :func:`op_rate_scale`."""
     start = max(c.busy_until for c in pool)
     if now is not None and now > start:
         start = now
-    rate = synchronous_rate([c.perf_scale for c in pool], penalty)
+    rate = (synchronous_rate([c.perf_scale for c in pool], penalty)
+            * op_rate_scale(job, op))
     dur = job.work_units / rate
     for c in pool:
         c.busy_until = start + dur
     return Placement(job, [c.chip_id for c in pool], start, start + dur,
                      len(pool) > 1,
                      nodes=tuple(sorted({c.node_id for c in pool})),
-                     rate_per_chip=rate / len(pool))
+                     rate_per_chip=rate / len(pool), op=op)
+
+
+def _reference_op(placements: Sequence[Placement],
+                  fallback: OperatingPoint) -> OperatingPoint:
+    """A schedule's single reference point: the unique per-placement op
+    when the batch is homogeneous (so ``Schedule.op`` stays exact for
+    single-point batches), else ``fallback`` — heterogeneous batches
+    keep their per-placement ops and the reference only anchors idle
+    power, fan and metadata."""
+    ops = {p.op for p in placements if p.op is not None}
+    if len(ops) == 1:
+        return next(iter(ops))
+    return fallback
 
 
 class Scheduler:
@@ -197,39 +244,52 @@ class Scheduler:
         self.policy = policy
         self.penalty = multi_gpu_penalty
         self.power_cap_w = power_cap_w
+        self._auto_op: Optional[OperatingPoint] = None
+        self._derate_cache: Dict[OperatingPoint,
+                                 Tuple[OperatingPoint, bool]] = {}
 
     # -- power cap ---------------------------------------------------------
 
     def resolve_operating_point(self, op: Optional[OperatingPoint] = None,
-                                jobs: Sequence[Job] = (),
+                                job: Optional[Job] = None,
                                 ) -> Tuple[OperatingPoint, bool]:
-        """Derate ``op`` down the S9150 DPM ladder until the full-load
-        cluster draw fits the cap.  Returns (op, derated).
-
-        When ``jobs`` are given, ``op`` defaults to the first job's
-        ``preferred_op``; the whole batch then runs at that single point
-        (heterogeneous per-node DVFS is a ROADMAP item), so any *other*
-        preferred operating point in the batch is dropped — with a
-        warning naming the dropped points, not silently."""
-        prefs = [(j.name, j.preferred_op) for j in jobs
-                 if j.preferred_op is not None]
-        if op is None and prefs:
-            op = prefs[0][1]
-        op = op or OperatingPoint.green500()
-        dropped: Dict[float, str] = {}
-        for name, p in prefs:
-            if p != op and p.f_mhz not in dropped:
-                dropped[p.f_mhz] = name
-        if dropped:
-            points = ", ".join(f"{f:.0f} MHz (job {name!r})"
-                               for f, name in sorted(dropped.items()))
-            warnings.warn(
-                f"batch runs at a single operating point "
-                f"({op.f_mhz:.0f} MHz); dropping preferred operating "
-                f"points: {points} — per-node heterogeneous DVFS is not "
-                f"supported yet", UserWarning, stacklevel=3)
+        """Resolve the operating point one job (or the batch reference,
+        when ``job`` is None) actually runs at.  Resolution order:
+        explicit ``op`` override → the job's ``preferred_op`` → the
+        autotuner cost model's recommendation (cached; falls back to the
+        Green500 point if the autotuner is unavailable) — then derated
+        down the S9150 DPM ladder until the full-load cluster draw fits
+        the power cap.  Returns ``(op, derated)``.  Every job's
+        preference is honored individually: nothing is coerced onto a
+        batch-wide point any more."""
+        if op is None and job is not None and job.preferred_op is not None:
+            op = job.preferred_op
+        if op is None:
+            op = self._recommended_op()
         if self.power_cap_w is None:
             return op, False
+        return self._derate(op)
+
+    def _recommended_op(self) -> OperatingPoint:
+        """The autotuner cost model's pick for jobs with no preference —
+        the coordinate-descent search over the analytic node model
+        (which rediscovers the paper's Green500 point)."""
+        if self._auto_op is None:
+            try:
+                from repro.autotune.measure import recommended_operating_point
+                self._auto_op = recommended_operating_point()
+            except Exception:
+                self._auto_op = OperatingPoint.green500()
+        return self._auto_op
+
+    def _derate(self, op: OperatingPoint) -> Tuple[OperatingPoint, bool]:
+        """Walk ``op`` down the S9150 DPM ladder (the autotuner's
+        discrete frequency states) until the full-load cluster draw fits
+        the cap.  Conservative per-job check: the whole cluster at this
+        job's point must fit, so any mix of admitted points also fits."""
+        cached = self._derate_cache.get(op)
+        if cached is not None:
+            return cached
         from repro.autotune.space import S9150_DPM_STATES_MHZ
         # the requested clock itself, then every DPM state below it (an
         # op already under the lowest state has nowhere left to derate)
@@ -239,6 +299,7 @@ class Scheduler:
         for f in ladder:
             cand = op.replace(f_mhz=float(f))
             if self._full_load_power(cand) <= self.power_cap_w:
+                self._derate_cache[op] = (cand, f != op.f_mhz)
                 return cand, f != op.f_mhz
         floor = self._full_load_power(op.replace(f_mhz=float(ladder[-1])))
         raise PowerCapError(
@@ -257,12 +318,22 @@ class Scheduler:
 
     def schedule(self, jobs: Sequence[Job], *,
                  op: Optional[OperatingPoint] = None) -> Schedule:
-        op, derated = self.resolve_operating_point(op, jobs=jobs)
+        """Place ``jobs`` (largest first), resolving each job's operating
+        point individually (see :meth:`resolve_operating_point`).  An
+        explicit ``op`` overrides every preference — the pre-existing
+        "force the batch to one point" knob.  ``Schedule.op`` is the
+        single point when the batch is homogeneous, else the resolved
+        batch reference; per-placement points ride on
+        ``Placement.op``."""
+        ref, derated = self.resolve_operating_point(op)
         chips = self.topology.chips()
         placements: List[Placement] = []
         for job in sorted(jobs, key=lambda j: -j.work_units):
-            placements.append(self._place(job, chips))
-        return Schedule(placements, op, self.topology, derated=derated)
+            job_op, job_derated = self.resolve_operating_point(op, job=job)
+            derated = derated or job_derated
+            placements.append(self._place(job, chips, op=job_op))
+        return Schedule(placements, _reference_op(placements, ref),
+                        self.topology, derated=derated)
 
     def _chips_needed(self, job: Job) -> int:
         need = max(1, math.ceil(job.mem_gb / self.topology.gpu_mem_gb))
@@ -306,9 +377,10 @@ class Scheduler:
         # round_robin: stripe across nodes by raw chip order, earliest-free
         return sorted(chips, key=lambda c: (c.busy_until, c.chip_id))[:need]
 
-    def _place(self, job: Job, chips: List[Chip]) -> Placement:
+    def _place(self, job: Job, chips: List[Chip], *,
+               op: Optional[OperatingPoint] = None) -> Placement:
         pool = self._pick_pool(self._chips_needed(job), chips)
-        return _commit_placement(job, pool, self.penalty)
+        return _commit_placement(job, pool, self.penalty, op=op)
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,8 @@ from repro.cluster.run import _merged_trace
 from repro.cluster.scheduler import (ChipPool, ClusterTopology,
                                      GREEN500_TOPOLOGY, MULTI_GPU_SLOWDOWN,
                                      Placement, Schedule, Scheduler,
-                                     _commit_placement, synchronous_rate)
+                                     _commit_placement, _reference_op,
+                                     op_rate_scale, synchronous_rate)
 from repro.cluster.stats import (COMPLETED, DEFAULT_USD_PER_KWH, DROPPED,
                                  JobRecord, SimStats, compute_stats)
 from repro.distributed.fault import WeibullFailureModel
@@ -99,7 +100,15 @@ class _Sim:
                           power_cap_w=power_cap_w,
                           multi_gpu_penalty=penalty)
         jobs = [a.job for a in arrivals]
-        self.op, self.derated = sched.resolve_operating_point(op, jobs=jobs)
+        # per-job operating points, resolved up front exactly like the
+        # batch scheduler (explicit op → preferred_op → autotuner pick,
+        # each derated under the cap); self.op is the batch reference
+        self.op, self.derated = sched.resolve_operating_point(op)
+        self.job_ops: List[OperatingPoint] = []
+        for j in jobs:
+            job_op, job_derated = sched.resolve_operating_point(op, job=j)
+            self.job_ops.append(job_op)
+            self.derated = self.derated or job_derated
         # chip widths validated up front: an unplaceable job fails the
         # submit, exactly like the batch scheduler
         self.need = [sched._chips_needed(j) for j in jobs]
@@ -140,7 +149,8 @@ class _Sim:
     # -- event handlers ------------------------------------------------------
 
     def _start(self, rec: JobRecord, pool_chips, t: float) -> None:
-        p = _commit_placement(rec.job, pool_chips, self.penalty, now=t)
+        p = _commit_placement(rec.job, pool_chips, self.penalty, now=t,
+                              op=self.job_ops[rec.uid])
         self.placements.append(p)
         if rec.start_s is None:
             rec.start_s = p.start
@@ -210,8 +220,9 @@ class _Sim:
             if cand is None:
                 cand = self.pool.pick_now(need, t)
                 if cand is not None:
-                    rate = synchronous_rate(
+                    rate = (synchronous_rate(
                         [c.perf_scale for c in cand], self.penalty)
+                        * op_rate_scale(rec.job, self.job_ops[rec.uid]))
                     if t + rec.job.work_units / rate > t_res:
                         cand = None
             if cand is None:
@@ -289,8 +300,8 @@ def simulate(arrivals: ArrivalsLike, *,
                seed=seed, max_requeues=max_requeues, penalty=multi_gpu_penalty)
     sim.run()
 
-    schedule = Schedule(sim.placements, sim.op, topology,
-                        derated=sim.derated)
+    schedule = Schedule(sim.placements, _reference_op(sim.placements, sim.op),
+                        topology, derated=sim.derated)
     schedule.meta["policy"] = policy
     if network_w is None:
         network_w = topology.network_w

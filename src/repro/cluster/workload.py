@@ -252,6 +252,7 @@ class TrainWorkload:
     smoke: bool = True
     remat: str = "none"            # must match the compiled step (the
                                    # launch.train driver uses remat="none")
+    preferred_op: Optional[OperatingPoint] = None
     _cost_cache: Optional[Any] = field(default=None, init=False,
                                        repr=False, compare=False)
 
@@ -280,7 +281,8 @@ class TrainWorkload:
         mem_gb = max(ac.hbm_bytes / 1e9, 0.1)
         return Job(self.name, mem_gb,
                    work_units=self.steps * ac.flops / 1e12,
-                   shardable=True, kind=self.kind)
+                   shardable=True, preferred_op=self.preferred_op,
+                   kind=self.kind)
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -315,6 +317,7 @@ class ServeWorkload:
     gen: int = 32
     smoke: bool = True
     kv_int8: bool = False
+    preferred_op: Optional[OperatingPoint] = None
     _cost_cache: Optional[Any] = field(default=None, init=False,
                                        repr=False, compare=False)
 
@@ -346,7 +349,7 @@ class ServeWorkload:
         mem_gb = max((pre.hbm_bytes + dec.hbm_bytes) / 1e9, 0.1)
         work = (pre.flops + self.gen * dec.flops) / 1e12
         return Job(self.name, mem_gb, work_units=work, shardable=True,
-                   kind=self.kind)
+                   preferred_op=self.preferred_op, kind=self.kind)
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -384,6 +387,7 @@ class SyntheticWorkload:
     n_nodes: int = 1
     mem_gb: float = 13.0
     work_units: float = 600.0
+    preferred_op: Optional[OperatingPoint] = None
 
     def __post_init__(self):
         if self.profile is None:
@@ -392,7 +396,8 @@ class SyntheticWorkload:
 
     def job(self) -> Job:
         return Job(self.name, self.mem_gb, self.work_units,
-                   shardable=True, kind=self.kind)
+                   shardable=True, preferred_op=self.preferred_op,
+                   kind=self.kind)
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:

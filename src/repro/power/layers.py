@@ -25,13 +25,37 @@ redundant PSUs, ~94% peak efficiency near half load).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.power.model import (S9150, GPUSpec, OperatingPoint, V_MIN,
                                fan_power, gpu_power, gpu_power_throttled,
                                uniform_vids)
+
+# A batched entry point accepts either one shared operating point or a
+# per-chip / per-sample spread of them (resolved through op_bins).
+OpOrSpread = Union[OperatingPoint, Sequence[OperatingPoint]]
+
+
+def op_bins(ops: Sequence[OperatingPoint],
+            ) -> Tuple[List[OperatingPoint], np.ndarray]:
+    """Dedupe an operating-point spread into ``(bins, index)``: ``bins``
+    holds the distinct points in first-seen order and ``index[i]`` is the
+    bin of ``ops[i]``.  The batched layer entry points evaluate the
+    scalar device model once per *bin* — not once per chip or sample —
+    and gather through the index, so a heterogeneous population costs
+    as many model evaluations as it has distinct operating points."""
+    bins: List[OperatingPoint] = []
+    where: Dict[OperatingPoint, int] = {}
+    index = np.empty(len(ops), dtype=np.intp)
+    for i, o in enumerate(ops):
+        b = where.get(o)
+        if b is None:
+            b = where[o] = len(bins)
+            bins.append(o)
+        index[i] = b
+    return bins, index
 
 # Host DC draw: 2x10-core CPUs + 256 GB DIMMs + chipset + IB HCA.  The
 # legacy flat model charged the host 200 W *at the wall*; the composed
@@ -92,16 +116,30 @@ class GPUModel:
                                    util=op.gpu_util() * load,
                                    tdp_w=self.spec.tdp_w)
 
-    def power_batch(self, op: OperatingPoint, *, load) -> np.ndarray:
+    def power_batch(self, op: OpOrSpread, *, load) -> np.ndarray:
         """Vectorized :meth:`power`: an array of duty-cycle loads maps
-        elementwise to board watts (same model, one ufunc pass)."""
-        return gpu_power_throttled(op.f_mhz, self.vid,
-                                   temp_c=op.temperature(),
-                                   util=op.gpu_util()
-                                   * np.asarray(load, dtype=float),
+        elementwise to board watts (same model, one ufunc pass).
+
+        ``op`` may also be a per-sample *spread* of operating points
+        (zipped elementwise with ``load``): the spread is deduped into
+        per-bin (clock, temperature, utilization) lookup tables via
+        :func:`op_bins`, so sample ``i`` draws exactly what
+        ``power(op[i], load=load[i])`` returns — bit-for-bit."""
+        if isinstance(op, OperatingPoint):
+            return gpu_power_throttled(op.f_mhz, self.vid,
+                                       temp_c=op.temperature(),
+                                       util=op.gpu_util()
+                                       * np.asarray(load, dtype=float),
+                                       tdp_w=self.spec.tdp_w)
+        bins, idx = op_bins(op)
+        f = np.array([o.f_mhz for o in bins])[idx]
+        temp = np.array([o.temperature() for o in bins])[idx]
+        util = np.array([o.gpu_util() for o in bins])[idx]
+        return gpu_power_throttled(f, self.vid, temp_c=temp,
+                                   util=util * np.asarray(load, dtype=float),
                                    tdp_w=self.spec.tdp_w)
 
-    def component_watts_batch(self, op: OperatingPoint, *,
+    def component_watts_batch(self, op: OpOrSpread, *,
                               load) -> Dict[str, np.ndarray]:
         return {"gpu": self.power_batch(op, load=load)}
 
@@ -144,15 +182,20 @@ class NodeModel:
                                             gpu_dc=gpu_dc)
         return {k: float(v) for k, v in watts.items()}
 
-    def component_watts_series(self, op: OperatingPoint, *, load=1.0,
+    def component_watts_series(self, op: OpOrSpread, *, load=1.0,
                                fan=None, gpu_dc=None,
                                ) -> Dict[str, np.ndarray]:
         """Batched :meth:`component_watts` over a *time series*: ``load``
         and/or ``fan`` may be arrays (one entry per sample) and every
         returned component is an array of the common broadcast shape.
-        ``gpu_dc`` short-circuits the GPU model with a precomputed DC
-        draw per sample (the occupancy engine's path)."""
-        duty = op.fan if fan is None else fan
+        ``op`` may be a per-sample spread of operating points (see
+        :func:`op_bins`); the fan duty then defaults to each sample's
+        own point.  ``gpu_dc`` short-circuits the GPU model with a
+        precomputed DC draw per sample (the occupancy engine's path)."""
+        if isinstance(op, OperatingPoint):
+            duty = op.fan if fan is None else fan
+        else:
+            duty = np.array([o.fan for o in op]) if fan is None else fan
         if gpu_dc is None:
             gpu_dc = 0.0
             for g in self.gpus:
@@ -168,19 +211,45 @@ class NodeModel:
                 "fan": full(fan_dc), "psu_loss": full(self.psu.loss_w(dc))}
 
     def component_watts_batch(self, op: OperatingPoint, busy_counts, *,
-                              fan=None) -> Dict[str, np.ndarray]:
-        """Batched :meth:`component_watts` over *occupancy*: an integer
-        array of busy-chip counts (0 … ``len(self.gpus)``) maps to
-        per-sample component watts.  Each distinct count is evaluated
-        once through the scalar GPU model (a ``len(gpus)+1``-entry
-        lookup table) and broadcast.  Assumes a homogeneous chip
-        population (``gpus[0]`` binds the bin).  NOTE: the cluster
-        engine itself sums per-chip watts in chip order and hands the
-        result to :meth:`component_watts_series` via ``gpu_dc`` — the
-        lookup table here adds busy chips first, which may differ in
-        the last ulp for mixed orderings, so this convenience entry
-        point must not replace the engine's chip-order sum."""
+                              fan=None, chip_ops:
+                              Optional[Sequence[OperatingPoint]] = None,
+                              ) -> Dict[str, np.ndarray]:
+        """Batched :meth:`component_watts` over *occupancy*.
+
+        Homogeneous form (``chip_ops=None``): ``busy_counts`` is an
+        integer array of busy-chip counts (0 … ``len(self.gpus)``); each
+        distinct count is evaluated once through the scalar GPU model (a
+        ``len(gpus)+1``-entry lookup table) and broadcast — ``gpus[0]``
+        binds the bin for the whole population.
+
+        Heterogeneous form: ``chip_ops`` gives every chip its own
+        operating point (clock/vid/fan spread) and ``busy_counts``
+        becomes a boolean occupancy mask whose trailing axis is the chip
+        axis.  Each chip's busy/idle watts are evaluated once through
+        *its own* scalar model (a per-chip two-entry lookup table — the
+        per-bin generalization), summed in chip order, so per-sample
+        totals match the scalar ``component_watts(gpu_w_override=...)``
+        path bit-for-bit.  ``op`` still sets the node-level fan default.
+
+        NOTE: the homogeneous count table adds busy chips first, which
+        may differ in the last ulp from a mixed chip-order sum, so that
+        convenience form must not replace the engine's chip-order sum."""
         g = len(self.gpus)
+        if chip_ops is not None:
+            if len(chip_ops) != g:
+                raise ValueError(f"chip_ops must give one operating point "
+                                 f"per chip ({g}), got {len(chip_ops)}")
+            mask = np.asarray(busy_counts, dtype=bool)
+            if mask.shape[-1:] != (g,):
+                raise ValueError(f"with chip_ops, busy_counts is a boolean "
+                                 f"mask whose last axis is the chip axis "
+                                 f"({g}); got shape {mask.shape}")
+            w_busy = np.array([gpu.power(o, load=1.0)
+                               for gpu, o in zip(self.gpus, chip_ops)])
+            w_idle = np.array([gpu.power(o, load=0.0)
+                               for gpu, o in zip(self.gpus, chip_ops)])
+            gpu_dc = np.sum(np.where(mask, w_busy, w_idle), axis=-1)
+            return self.component_watts_series(op, fan=fan, gpu_dc=gpu_dc)
         counts = np.asarray(busy_counts, dtype=np.intp)
         if counts.size and (counts.min() < 0 or counts.max() > g):
             raise ValueError(f"busy counts must lie in [0, {g}]")

@@ -68,15 +68,23 @@ FAN_CUBIC_W = 160.0      # node fans at 100% ≈ 172 W
 V_F_SLOPE = 0.0006       # V per MHz of downclock
 
 
-def voltage_at(f_mhz: float, vid_900: float) -> float:
-    """Operating voltage at frequency f for a chip with voltage-ID vid_900."""
-    return max(0.8, vid_900 - V_F_SLOPE * (STOCK_MHZ - f_mhz))
+def voltage_at(f_mhz, vid_900):
+    """Operating voltage at frequency f for a chip with voltage-ID vid_900.
+    Array-aware over both axes: the per-bin batched layer entry points
+    hand whole (clock, vid) spreads in at once."""
+    v = np.maximum(0.8, vid_900 - V_F_SLOPE * (STOCK_MHZ
+                                               - np.asarray(f_mhz)))
+    return float(v) if np.ndim(v) == 0 else v
 
 
-def gpu_static_power(vid_900: float, temp_c: float = 55.0) -> float:
-    scale = (vid_900 / V_MIN) ** 2
-    return (P_GPU_STATIC_40C + TEMP_SLOPE_W_PER_C * max(temp_c - 40.0, 0.0)) \
+def gpu_static_power(vid_900, temp_c=55.0):
+    """Static (leakage) draw at a voltage ID and temperature.  Array-aware
+    over both axes (per-chip vid / per-sample temperature spreads)."""
+    scale = (np.asarray(vid_900) / V_MIN) ** 2
+    p = (P_GPU_STATIC_40C
+         + TEMP_SLOPE_W_PER_C * np.maximum(np.asarray(temp_c) - 40.0, 0.0)) \
         * scale
+    return float(p) if np.ndim(p) == 0 else p
 
 
 def gpu_dynamic_power(f_ghz: float, v: float, util: float = 1.0) -> float:

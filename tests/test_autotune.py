@@ -183,3 +183,14 @@ def test_linpack_tuned_path(tmp_path):
         assert r.block < 96                # tuned blocking, not the input
     finally:
         set_default_cache(None)
+
+
+def test_recommended_operating_point_is_green500_and_cached():
+    # the scheduler's placement-time consult: the coordinate-descent
+    # search over the analytic node model rediscovers the paper's
+    # Green500 record point, and the result is cached per process
+    from repro.autotune.measure import recommended_operating_point
+    from repro.power.model import OperatingPoint
+    op = recommended_operating_point()
+    assert op == OperatingPoint.green500()
+    assert recommended_operating_point() is op

@@ -1,0 +1,144 @@
+"""The benchmark perf-regression gate (``benchmarks/compare.py``):
+machine-readable REGRESSION lines for wall-time blowups, gated-value
+drift, missing tables/rows and errored tables; timing-derived fields
+exempt; new tables tolerated."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import (MIN_BASE_SECONDS, compare, compare_derived,
+                                main, parse_derived)
+
+
+def _table(seconds=1.0, **rows):
+    return {"seconds": seconds,
+            "value": {name: {"us_per_call": 0.0, "derived": derived}
+                      for name, derived in rows.items()}}
+
+
+BASE = {
+    "cluster_hetero": _table(
+        seconds=0.5,
+        **{"hetero/mixed_56": "mflops_w=4912.3;clocks=774+900;makespan=484",
+           "hetero/green500_record": "kw=57.13;paper=57.13"}),
+    "cluster_scale": _table(
+        seconds=2.0,
+        **{"scale/speedup_56": "loop_s=1.2;vector_s=0.01;speedup=120x;"
+                               "samples=113"}),
+}
+
+
+def test_identical_runs_pass():
+    regs, report = compare(BASE, json.loads(json.dumps(BASE)))
+    assert regs == []
+    assert all(t["status"] == "ok" for t in report["tables"].values())
+
+
+def test_wall_time_regression_flagged():
+    cur = json.loads(json.dumps(BASE))
+    cur["cluster_scale"]["seconds"] = 6.0            # > 2.5 x 2.0
+    regs, _ = compare(BASE, cur)
+    assert len(regs) == 1
+    assert regs[0].startswith("REGRESSION:cluster_scale:time")
+
+
+def test_small_baselines_floored_before_time_gate():
+    base = {"t": _table(seconds=0.001, r="x=1")}
+    cur = {"t": _table(seconds=MIN_BASE_SECONDS * 2.0, r="x=1")}
+    regs, _ = compare(base, cur)                     # 2x the floor: fine
+    assert regs == []
+
+
+def test_gated_value_drift_flagged():
+    cur = json.loads(json.dumps(BASE))
+    row = cur["cluster_hetero"]["value"]["hetero/green500_record"]
+    row["derived"] = "kw=58.90;paper=57.13"          # > 1% drift
+    regs, report = compare(BASE, cur)
+    assert len(regs) == 1
+    assert regs[0].startswith("REGRESSION:cluster_hetero:")
+    assert "kw=58.9" in regs[0]
+    assert report["tables"]["cluster_hetero"]["status"] == "drift"
+
+
+def test_timing_fields_are_exempt_from_value_gate():
+    cur = json.loads(json.dumps(BASE))
+    row = cur["cluster_scale"]["value"]["scale/speedup_56"]
+    row["derived"] = "loop_s=9.9;vector_s=0.5;speedup=19x;samples=113"
+    regs, _ = compare(BASE, cur)
+    assert regs == []                                # time gate's job
+
+
+def test_missing_table_row_and_error_flagged():
+    cur = json.loads(json.dumps(BASE))
+    del cur["cluster_scale"]
+    cur["cluster_hetero"] = {"error": "assert failed", "seconds": 0.1}
+    regs, _ = compare(BASE, cur)
+    details = "\n".join(regs)
+    assert "REGRESSION:cluster_scale:table missing" in details
+    assert "REGRESSION:cluster_hetero:errored: assert failed" in details
+
+    cur = json.loads(json.dumps(BASE))
+    del cur["cluster_hetero"]["value"]["hetero/green500_record"]
+    regs, _ = compare(BASE, cur)
+    assert any("row 'hetero/green500_record' missing" in r for r in regs)
+
+
+def test_new_tables_and_rows_are_fine():
+    cur = json.loads(json.dumps(BASE))
+    cur["brand_new_bench"] = _table(seconds=3.0, r="y=2")
+    cur["cluster_hetero"]["value"]["hetero/extra"] = {
+        "us_per_call": 0.0, "derived": "z=3"}
+    regs, _ = compare(BASE, cur)
+    assert regs == []
+
+
+def test_non_numeric_fields_compared_exactly():
+    assert compare_derived("clocks=774+900", "clocks=774+900", 0.01) == []
+    probs = compare_derived("clocks=774+900", "clocks=774", 0.01)
+    assert probs and "clocks" in probs[0]
+
+
+def test_percentage_fields_compare_numerically():
+    assert compare_derived("gain=3.7%", "gain=3.7%", 0.01) == []
+    assert compare_derived("gain=3.7%", "gain=5.0%", 0.01)
+
+
+def test_parse_derived_ignores_unkeyed_parts():
+    assert parse_derived("a=1;junk;b=x=y") == {"a": "1", "b": "x=y"}
+
+
+def test_main_exit_codes_and_report(tmp_path):
+    base_p = tmp_path / "base.json"
+    cur_p = tmp_path / "cur.json"
+    rep_p = tmp_path / "report.json"
+    base_p.write_text(json.dumps(BASE))
+
+    cur = json.loads(json.dumps(BASE))
+    cur_p.write_text(json.dumps(cur))
+    assert main([str(base_p), str(cur_p), "--report", str(rep_p)]) == 0
+    assert json.loads(rep_p.read_text())["regressions"] == []
+
+    cur["cluster_scale"]["seconds"] = 99.0
+    cur_p.write_text(json.dumps(cur))
+    assert main([str(base_p), str(cur_p), "--report", str(rep_p)]) == 1
+    rep = json.loads(rep_p.read_text())
+    assert rep["regressions"] and rep["tables"]["cluster_scale"][
+        "status"] == "slow"
+
+
+def test_committed_baseline_is_loadable_and_error_free():
+    baseline = Path(__file__).resolve().parents[1] / "benchmarks" / \
+        "baseline" / "BENCH_cluster.json"
+    if not baseline.exists():
+        pytest.skip("baseline not generated yet")
+    data = json.loads(baseline.read_text())
+    assert data, "baseline must not be empty"
+    assert all("error" not in t for t in data.values()), \
+        "baseline must only record passing tables"
+    # self-comparison is the identity: no regressions against itself
+    regs, _ = compare(data, data)
+    assert regs == []

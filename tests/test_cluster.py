@@ -292,33 +292,62 @@ def test_preferred_op_flows_from_jobs():
     assert res.op.f_mhz == 900.0
 
 
-def test_mixed_preferred_ops_warn_with_dropped_points():
-    # regression: jobs whose preferred_op differs from the batch's first
-    # used to be dropped *silently*; the scheduler must now say which
-    # operating points it discarded
+def test_mixed_preferred_ops_resolve_per_job():
+    # regression (twice over): jobs whose preferred_op differed from the
+    # batch's first used to be dropped — first silently, then with a
+    # UserWarning.  Per-job resolution means every preference is now
+    # honored on its own placement, and nothing warns.
     jobs = [Job("hpl", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=900.0)),
             Job("lqcd", 13.0, 1.0,
                 preferred_op=OperatingPoint.green500()),
             Job("serve", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=655.0))]
-    with pytest.warns(UserWarning, match=r"655 MHz.*774 MHz") as rec:
-        op, derated = Scheduler(
-            ClusterTopology(n_nodes=1)).resolve_operating_point(jobs=jobs)
-    assert op.f_mhz == 900.0 and not derated
-    msg = str(rec[0].message)
-    assert "'lqcd'" in msg and "'serve'" in msg and "900" in msg
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sched = Scheduler(ClusterTopology(n_nodes=1))
+        schedule = sched.schedule(jobs)
+    by_name = {p.job.name: p for p in schedule.placements}
+    assert by_name["hpl"].op.f_mhz == 900.0
+    assert by_name["lqcd"].op == OperatingPoint.green500()
+    assert by_name["serve"].op.f_mhz == 655.0
+    assert not schedule.derated
 
 
-def test_uniform_preferred_ops_do_not_warn():
+def test_explicit_op_overrides_every_preference():
+    jobs = [Job("hpl", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=900.0)),
+            Job("lqcd", 13.0, 1.0, preferred_op=OperatingPoint.green500())]
+    forced = OperatingPoint(f_mhz=655.0)
+    schedule = Scheduler(ClusterTopology(n_nodes=1)).schedule(jobs, op=forced)
+    assert all(p.op == forced for p in schedule.placements)
+    assert schedule.op == forced
+
+
+def test_power_cap_derates_per_job():
+    # under a cap that fits the Green500 point but not 900 MHz, only the
+    # 900-preferring job walks down the DPM ladder; the efficiency-mode
+    # job keeps its point untouched
+    jobs = [Job("hot", 13.0, 1.0, preferred_op=OperatingPoint(f_mhz=900.0)),
+            Job("cool", 13.0, 1.0, preferred_op=OperatingPoint.green500())]
+    sched = Scheduler(ClusterTopology(n_nodes=1), power_cap_w=1400.0)
+    schedule = sched.schedule(jobs)
+    by_name = {p.job.name: p for p in schedule.placements}
+    assert by_name["hot"].op.f_mhz < 900.0
+    assert by_name["cool"].op == OperatingPoint.green500()
+    assert schedule.derated
+
+
+def test_uniform_preferred_ops_resolve_silently():
     pref = OperatingPoint(f_mhz=900.0)
     jobs = [Job(f"j{i}", 13.0, 1.0, preferred_op=pref) for i in range(3)]
     sched = Scheduler(ClusterTopology(n_nodes=1))
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        op, _ = sched.resolve_operating_point(jobs=jobs)
+        op, _ = sched.resolve_operating_point(job=jobs[0])
         assert op.f_mhz == 900.0
-        # no preferences at all is silent too
-        op, _ = sched.resolve_operating_point(
-            jobs=[Job("plain", 13.0, 1.0)])
+        # a homogeneous batch collapses to its one point
+        assert sched.schedule(jobs).op == pref
+        # no preference → the autotuner cost model's recommendation,
+        # which rediscovers the Green500 record point
+        op, _ = sched.resolve_operating_point(job=Job("plain", 13.0, 1.0))
         assert op == OperatingPoint.green500()
 
 

@@ -119,6 +119,21 @@ def test_oracle_single_job():
     assert sim.stats.jobs_submitted == 1
 
 
+def test_oracle_heterogeneous_operating_points():
+    # per-job ops survive the event loop: the online simulator resolves
+    # each arrival's preferred_op exactly like the batch scheduler, so
+    # the mixed-frequency trace is still bit-identical to cluster.run()
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"hpl{i}", 13.0, 400.0 + 31.0 * i,
+                preferred_op=OperatingPoint(f_mhz=900.0), kind="hpl")
+            for i in range(4)]
+    jobs += [Job(f"lqcd{i}", 13.0, 350.0 + 17.0 * i,
+                 preferred_op=OP, kind="lqcd") for i in range(8)]
+    sim = _oracle_case(top, jobs, op=None)
+    ops = {p.op.f_mhz for p in sim.schedule.placements}
+    assert ops == {900.0, 774.0}
+
+
 def test_oracle_backfill_single_width_batch():
     # with uniform single-chip jobs at t=0 backfill never finds a hole
     # (the head is only ever blocked when nothing is free), so the

@@ -123,6 +123,91 @@ def test_vectorized_trace_feeds_green500():
     assert measure_efficiency(tr, 3).mflops_per_w > 4000.0
 
 
+# -- heterogeneous per-placement operating points -----------------------------
+
+
+OP900 = OperatingPoint(f_mhz=900.0)
+OP655 = OperatingPoint(f_mhz=655.0)
+
+
+def _hetero_jobs(n, rng):
+    """A mixed batch: compute-bound HPL-ish jobs at 900 MHz, memory-bound
+    LQCD-ish jobs at the Green500 point, and no-preference stragglers."""
+    mixes = [(OP900, "hpl"), (OP, "lqcd"), (OP655, "lqcd"), (None, "lqcd")]
+    jobs = []
+    for i in range(n):
+        pref, kind = mixes[int(rng.integers(len(mixes)))]
+        jobs.append(Job(f"j{i}", float(rng.choice([13.0, 30.0])),
+                        float(rng.uniform(50.0, 600.0)),
+                        preferred_op=pref, kind=kind))
+    return jobs
+
+
+def test_equivalence_hetero_packed():
+    rng = np.random.default_rng(3)
+    top = ClusterTopology(n_nodes=3)
+    sch = _schedule(top, _hetero_jobs(30, rng), op=None)
+    assert len({p.op for p in sch.placements}) > 1
+    tr = _compare(sch, dt_s=7.0)
+    assert tr.meta["heterogeneous"]
+    assert tr.meta["placement_clocks_mhz"] == [655.0, 774.0, 900.0]
+
+
+def test_equivalence_hetero_round_robin():
+    rng = np.random.default_rng(4)
+    top = ClusterTopology(n_nodes=2)
+    sch = _schedule(top, _hetero_jobs(12, rng), policy="round_robin",
+                    op=None)
+    assert all(p.sharded for p in sch.placements)
+    assert len({p.op for p in sch.placements}) > 1
+    _compare(sch, dt_s=11.0)
+
+
+def test_equivalence_hetero_power_capped():
+    # a cap that fits the Green500 point on 2 nodes but not 900 MHz:
+    # only the 900-preferring placements walk down the DPM ladder, and
+    # the mixed-op trace still matches the loop oracle bit-for-bit
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"hot{i}", 13.0, 300.0, preferred_op=OP900, kind="hpl")
+            for i in range(4)]
+    jobs += [Job(f"cool{i}", 13.0, 300.0, preferred_op=OP, kind="lqcd")
+             for i in range(4)]
+    sch = _schedule(top, jobs, power_cap_w=2.6e3, op=None)
+    assert sch.derated
+    ops = {p.job.name[:3]: p.op for p in sch.placements}
+    assert ops["hot"].f_mhz < 900.0
+    assert ops["coo"] == OP
+    _compare(sch, dt_s=17.0)
+
+
+def test_equivalence_hetero_failure_requeue():
+    # the online simulator's as-executed schedule (failure-truncated
+    # attempts + requeues, per-job ops) rides the same engine: vectorized
+    # vs loop oracle on the very schedule simulate() produced
+    from repro.cluster.sim import simulate
+    from repro.distributed.fault import WeibullFailureModel
+
+    rng = np.random.default_rng(5)
+    fm = WeibullFailureModel(mtbf_s=1200.0, shape=1.0, repair_s=300.0)
+    res = simulate(_hetero_jobs(24, rng),
+                   topology=ClusterTopology(n_nodes=2),
+                   failure_model=fm, seed=7, dt_s=13.0)
+    assert len({p.op for p in res.schedule.placements}) > 1
+    _compare(res.schedule, dt_s=13.0)
+
+
+def test_hetero_compute_bound_jobs_finish_faster_at_900():
+    # op_rate_scale: the same HPL work at 900 MHz beats 774 in the
+    # published clock-for-perf ratio; memory-bound LQCD doesn't move
+    top = ClusterTopology(n_nodes=1)
+    hpl_774 = _schedule(top, [Job("h", 13.0, 600.0, kind="hpl")], op=OP)
+    hpl_900 = _schedule(top, [Job("h", 13.0, 600.0, kind="hpl")], op=OP900)
+    assert hpl_900.makespan < hpl_774.makespan
+    lqcd_774 = _schedule(top, [Job("l", 13.0, 600.0, kind="lqcd")], op=OP)
+    lqcd_900 = _schedule(top, [Job("l", 13.0, 600.0, kind="lqcd")], op=OP900)
+    assert lqcd_900.makespan == lqcd_774.makespan
+
+
 # -- columnar TraceRecorder ---------------------------------------------------
 
 
@@ -252,6 +337,67 @@ def test_gpu_power_batch_matches_scalar():
     for i, ld in enumerate(loads):
         assert gpu.power(OP, load=float(ld)) == batch[i]
     assert gpu.component_watts_batch(OP, load=loads)["gpu"][3] == batch[3]
+
+
+def test_op_bins_dedupes_in_first_seen_order():
+    from repro.power.layers import op_bins
+    ops = [OP900, OP, OP900, OP655, OP]
+    bins, idx = op_bins(ops)
+    assert bins == [OP900, OP, OP655]
+    assert np.array_equal(idx, [0, 1, 0, 2, 1])
+    assert all(bins[idx[i]] == o for i, o in enumerate(ops))
+
+
+def test_gpu_power_batch_per_sample_ops_matches_scalar():
+    # per-bin lookup-table property: a spread of operating points zipped
+    # with a load series draws exactly what the scalar model returns for
+    # each (op, load) pair — bit-for-bit
+    gpu = GPUModel(vid=1.2)
+    ops = [OP, OP900, OP655, OP900, OP]
+    loads = np.linspace(0.0, 1.0, len(ops))
+    batch = gpu.power_batch(ops, load=loads)
+    for i, (o, ld) in enumerate(zip(ops, loads)):
+        assert gpu.power(o, load=float(ld)) == batch[i], i
+    assert gpu.component_watts_batch(ops, load=loads)["gpu"][2] == batch[2]
+
+
+def test_component_watts_batch_per_chip_ops_matches_scalar():
+    # heterogeneous form: every chip at its own operating point, boolean
+    # occupancy mask — per-sample totals equal the scalar
+    # component_watts(gpu_w_override=...) path exactly
+    node = NodeModel.from_vids([1.1425, 1.15, 1.2, 1.25])
+    chip_ops = [OP900, OP, OP655, OP]
+    rng = np.random.default_rng(6)
+    mask = rng.integers(0, 2, size=(9, 4)).astype(bool)
+    batch = node.component_watts_batch(OP, mask, chip_ops=chip_ops)
+    for i in range(mask.shape[0]):
+        override = [gpu.power(o, load=1.0 if mask[i, c] else 0.0)
+                    for c, (gpu, o) in enumerate(zip(node.gpus, chip_ops))]
+        scalar = node.component_watts(OP, gpu_w_override=override)
+        for name, w in scalar.items():
+            assert w == batch[name][i], (name, i)
+
+
+def test_component_watts_batch_chip_ops_validates():
+    node = NodeModel()
+    with pytest.raises(ValueError, match="one operating point per chip"):
+        node.component_watts_batch(OP, np.ones((3, 4), dtype=bool),
+                                   chip_ops=[OP, OP900])
+    with pytest.raises(ValueError, match="chip axis"):
+        node.component_watts_batch(OP, np.ones((4, 3), dtype=bool),
+                                   chip_ops=[OP, OP900, OP655, OP])
+
+
+def test_node_series_accepts_op_spread():
+    # per-sample op spread through the node composition: each sample
+    # priced at its own point, fan duty defaulting to the sample's op
+    node = NodeModel()
+    ops = [OP, OP900, OP655]
+    series = node.component_watts_series(ops, load=1.0)
+    for i, o in enumerate(ops):
+        scalar = node.component_watts(o, load=1.0)
+        for name, w in scalar.items():
+            assert w == series[name][i], (name, i)
 
 
 def test_node_series_matches_scalar_per_sample():
