@@ -692,3 +692,112 @@ def cg_energy_to_solution() -> List[Row]:
                  f"op_saving={1 - e_eo.normal_ops / int(plain.iters):.1%};"
                  f"gflops_w_ratio={e_eo.gflops_per_w / e_plain.gflops_per_w:.2f}"))
     return rows
+
+
+# -- §1/§5: multi-chip even-odd D-slash with overlapped halo exchange ---------
+
+def dslash_multichip() -> List[Row]:
+    """Executed T-sharded even-odd D-slash (repro.lqcd.multichip_eo):
+    volume scaling of the sharded normal op, overlapped vs halo-then-
+    compute wall clock, the ICI/PCIe overlap roofline, and the measured
+    calibration feeding the cluster scheduler.
+
+    Wall-clock rows are reported but not drift-gated (the CI smoke host
+    runs 8 virtual CPU devices whose collectives are shared-memory
+    memcpys — there is no wire latency to hide, so overlap gains only
+    materialize on real interconnects; the roofline rows gate that
+    claim deterministically instead).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.lcsc_lqcd import (DSLASH_BW_FRACTION,
+                                         MULTI_GPU_SLOWDOWN, S9150_BW_GBS)
+    from repro.distributed.sharding import lattice_mesh
+    from repro.lqcd import (dslash_bytes_per_site, dslash_flops_per_site,
+                            random_su3_field)
+    from repro.lqcd.eo import eo_pack, pack_gauge
+    from repro.lqcd.multichip_eo import (ShardedWilsonEO,
+                                         analytic_lqcd_calibration,
+                                         measured_lqcd_calibration)
+
+    rows: List[Row] = []
+    n_dev = jax.device_count()
+
+    def timed_normal(lat, overlap):
+        ku, kr, ki = jax.random.split(jax.random.PRNGKey(0), 3)
+        U = random_su3_field(ku, lat)
+        b = (jax.random.normal(kr, lat + (4, 3))
+             + 1j * jax.random.normal(ki, lat + (4, 3))
+             ).astype(jnp.complex64)
+        U_e, U_o = pack_gauge(U)
+        ops = ShardedWilsonEO(U_e, U_o, 0.12, mesh=lattice_mesh(lat[3]),
+                              overlap=overlap)
+        v = eo_pack(b, 0)
+        return _timeit(lambda: jax.block_until_ready(ops.normal(v)))
+
+    # volume scaling: the sharded local problem becomes bandwidth-bound
+    # once dispatch overhead amortizes — achieved GB/s must rise with V
+    gbs = []
+    for lat in [(8, 8, 8, 8), (8, 8, 8, 16), (12, 12, 12, 24)]:
+        us = timed_normal(lat, overlap=True)
+        vol = int(np.prod(lat))
+        gf = 2 * vol * dslash_flops_per_site() / us / 1e3
+        bw = 2 * vol * dslash_bytes_per_site(4) / us / 1e3
+        gbs.append(bw)
+        rows.append((f"dslash_mc/{'x'.join(map(str, lat))}", us,
+                     f"n_dev={n_dev};gflops={gf:.2f};wall_gbs={bw:.2f}"))
+    # streaming rate must not collapse as volume grows (the larger local
+    # problems amortize dispatch overhead toward the bandwidth roof; exact
+    # ordering is noise-prone on the shared-core CPU smoke host)
+    assert max(gbs[1:]) > 0.8 * gbs[0]
+
+    # overlapped vs halo-then-compute at the largest benchmarked volume
+    lat = (12, 12, 12, 24)
+    us_noovl = timed_normal(lat, overlap=False)
+    us_ovl = timed_normal(lat, overlap=True)
+    speedup = us_noovl / us_ovl
+    rows.append(("dslash_mc/overlap_vs_baseline", us_ovl,
+                 f"us_baseline={us_noovl:.1f};speedup={speedup:.3f}"))
+    assert 0.5 < speedup < 2.0       # sanity floor only (see docstring)
+
+    # ICI/PCIe overlap roofline (deterministic gates): spin projection
+    # halves halo bytes, and overlapping hides the smaller of compute
+    # and halo time — together they bound the paper's ~20% multi-GPU
+    # loss band from both sides
+    bytes_site = dslash_bytes_per_site(8)
+    t_local = 8
+    compute_s = bytes_site / (S9150_BW_GBS * 1e9 * DSLASH_BW_FRACTION)
+    halo_full = (2 / t_local) * (24 * 8) / 14e9      # PCIe gen3 eff
+    halo_proj = halo_full / 2                        # 2 of 4 spin comps
+    frac_full = halo_full / (compute_s + halo_full)
+    frac_proj = halo_proj / (compute_s + halo_proj)
+    model_speedup = (compute_s + halo_proj) / max(compute_s, halo_proj)
+    rows.append(("dslash_mc/overlap_model", 0.0,
+                 f"comm_frac_full={frac_full:.1%};"
+                 f"comm_frac_proj={frac_proj:.1%};"
+                 f"model_speedup={model_speedup:.3f};"
+                 f"paper_loss={MULTI_GPU_SLOWDOWN:.0%}"))
+    assert 0.10 < frac_full < 0.35                   # paper: ~20% loss
+    assert frac_proj < frac_full                     # compression helps
+    assert 1.05 < model_speedup < 1.35               # overlap recovers it
+
+    # measured calibration -> cluster scheduler (PR-3 telemetry bus)
+    cal = measured_lqcd_calibration((8, 8, 8, 16), reps=2)
+    rows.append(("dslash_mc/calibration", cal.wall_s * 1e6 / 2,
+                 f"n_dev={cal.n_devices};gflops={cal.gflops:.3f};"
+                 f"gflops_per_w={cal.gflops_per_w:.2e}"))
+    assert cal.energy_j > 0 and cal.trace is not None
+
+    from repro.cluster.workload import LQCDSolveWorkload
+    from repro.power.model import OperatingPoint
+    op = OperatingPoint.green500()
+    ana = analytic_lqcd_calibration(cal.lattice, cal.n_devices)
+    res_a = LQCDSolveWorkload(calibration=ana).execute(op)
+    res_m = LQCDSolveWorkload(calibration=cal).execute(op)
+    rows.append(("dslash_mc/workload_calibrated", 0.0,
+                 f"cal_vs_analytic={res_a.details['cal_vs_analytic']:.3f};"
+                 f"vs_analytic_gflops="
+                 f"{res_m.details['cal_vs_analytic']:.2e}"))
+    # an analytic-shaped calibration must reproduce the roofline exactly
+    assert abs(res_a.details["cal_vs_analytic"] - 1.0) < 1e-6
+    return rows

@@ -20,9 +20,19 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
+
+# the multi-chip benches need a device mesh; force the virtual-device
+# flag (and CPU backend) before any bench imports jax — the CI
+# bench-smoke leg only sets JAX_PLATFORMS
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
 
 
 def benches():
@@ -37,6 +47,7 @@ def benches():
         paper_tables.cluster_power_trace,
         paper_tables.result_efficiency,
         paper_tables.dslash_bw,
+        paper_tables.dslash_multichip,
         paper_tables.autotune_operating_point,
         paper_tables.cluster_schedule,
         paper_tables.cluster_scale,

@@ -181,11 +181,19 @@ class HPLWorkload:
 class LQCDSolveWorkload:
     """``repro.lqcd.solve_dirac`` (plain / even-odd mixed CG) behind the
     Workload API — the paper's production workload: one lattice per GPU,
-    sharded only when the lattice outgrows chip memory."""
+    sharded only when the lattice outgrows chip memory.
+
+    ``calibration`` (an :class:`repro.lqcd.LQCDCalibration`, e.g. from
+    ``measured_lqcd_calibration()``) replaces the analytic S9150 roofline
+    with figures measured from the executed multi-chip normal op: the
+    energy model then streams at the calibration's effective bandwidth and
+    burns its busy watts.  Left ``None``, the default analytic path is
+    byte-identical to before."""
 
     name: str = "lqcd"
     lattice: Optional[Any] = None      # LatticeConfig; default SMOKE_LATTICE
     seed: int = 0
+    calibration: Optional[Any] = None  # LQCDCalibration; default analytic
 
     def __post_init__(self):
         if self.lattice is None:
@@ -217,22 +225,41 @@ class LQCDSolveWorkload:
         scfg = self.lattice.solver
         eo = scfg.preconditioner != "none"
         inner_bytes = 2 if (eo and scfg.mixed_precision) else 4
-        # the operating point sets device power (undervolted/derated chips
-        # draw less); the memory-bound solve time barely moves with clock —
-        # the paper's <1.5% claim — so bandwidth stays at the S9150 spec
-        hw = SolverHW(power_w=gpu_power_throttled(
-            op.f_mhz, op.vid, temp_c=op.temperature(), util=1.0))
+        cal = self.calibration
+        if cal is not None:
+            # measured multi-chip figures (repro.lqcd.multichip_eo): stream
+            # at the executed effective bandwidth, burn the calibrated
+            # aggregate busy watts
+            hw = SolverHW(name=f"{cal.source}:{cal.n_devices}chip",
+                          bandwidth_gbs=cal.eff_bw_gbs, bw_fraction=1.0,
+                          power_w=cal.busy_w)
+        else:
+            # the operating point sets device power (undervolted/derated
+            # chips draw less); the memory-bound solve time barely moves
+            # with clock — the paper's <1.5% claim — so bandwidth stays at
+            # the S9150 spec
+            hw = SolverHW(power_w=gpu_power_throttled(
+                op.f_mhz, op.vid, temp_c=op.temperature(), util=1.0))
         rep = solver_energy(
             f"cg/{self.name}", self.lattice.volume, int(res.iters),
             outer_ops=int(getattr(res, "outer_iters", 0)),
             inner_real_bytes=inner_bytes, even_odd=eo, hw=hw,
             recorder=recorder)
         t_end = float(rep.trace.t[-1])
+        extra = {}
+        if cal is not None:
+            from repro.lqcd.multichip_eo import analytic_lqcd_calibration
+            ana = analytic_lqcd_calibration(cal.lattice, cal.n_devices)
+            extra = dict(calibration_source=cal.source,
+                         cal_n_devices=cal.n_devices,
+                         cal_gflops=cal.gflops,
+                         cal_gflops_per_w=cal.gflops_per_w,
+                         cal_vs_analytic=cal.gflops / max(ana.gflops, 1e-9))
         return _result(self, op, rep.trace, rep.gflops, rep.time_s,
                        window=(t_end - rep.time_s, t_end),
                        iters=int(res.iters),
                        rel_residual=float(res.rel_residual),
-                       converged=bool(res.converged))
+                       converged=bool(res.converged), **extra)
 
 
 @register_workload("train")

@@ -216,6 +216,31 @@ def named_shardings(mesh, pspecs: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# Lattice (LQCD) rules — T-axis sharding for the even-odd solver
+# ---------------------------------------------------------------------------
+
+def lattice_mesh(t_extent: int, n_devices: Optional[int] = None,
+                 axis_name: str = TP):
+    """1-D device mesh for lattice T-sharding.
+
+    Picks the largest device count (≤ ``n_devices`` or all local devices)
+    that divides ``t_extent`` — JAX rejects uneven shards, and the halo
+    ring in ``repro.lqcd.multichip_eo`` assumes equal local T blocks.
+    """
+    avail = n_devices or jax.device_count()
+    n = max(d for d in range(1, avail + 1) if t_extent % d == 0)
+    return jax.make_mesh((n,), (axis_name,))
+
+
+def lattice_eo_specs(axis_name: str = TP) -> Tuple[P, P]:
+    """(gauge-half, spinor-half) PartitionSpecs for the compact even-odd
+    layout: gauge ``(4, X/2, Y, Z, T, 3, 3)`` and spinor
+    ``(X/2, Y, Z, T, 4, 3)``, both sharded on the T axis."""
+    return (P(None, None, None, None, axis_name, None, None),
+            P(None, None, None, axis_name, None, None))
+
+
+# ---------------------------------------------------------------------------
 # Batch / cache rules
 # ---------------------------------------------------------------------------
 

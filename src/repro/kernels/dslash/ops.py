@@ -28,6 +28,16 @@ def _resolve_t_block(t_block: int | None, tuned: bool,
     return DEFAULT_T_BLOCK
 
 
+def sharded_t_block(local_lat: tuple) -> int:
+    """T-block for a T-sharded local volume, resolved through the
+    autotune cache so sharded local volumes (including their ±1 halo
+    pad) get their own entries — the multi-chip even-odd path
+    (``repro.lqcd.multichip_eo``) calls this once per gauge binding."""
+    from repro.autotune import tuned_config
+    lat = tuple(int(d) for d in local_lat)
+    return int(tuned_config("dslash", lat)["t_block"])
+
+
 @partial(jax.jit, static_argnames=("t_block", "interpret"))
 def _dslash_call(U: jnp.ndarray, psi: jnp.ndarray, *, t_block: int,
                  interpret: bool) -> jnp.ndarray:

@@ -25,3 +25,10 @@ from repro.lqcd.eo import (  # noqa: F401
     pack_gauge,
     schur_matvec,
 )
+from repro.lqcd.multichip_eo import (  # noqa: F401
+    LQCDCalibration,
+    ShardedWilsonEO,
+    analytic_lqcd_calibration,
+    dslash_half_sharded,
+    measured_lqcd_calibration,
+)

@@ -109,7 +109,9 @@ def _round_complex(v: jnp.ndarray, dtype) -> jnp.ndarray:
 def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
                     tol: float = 1e-6, max_iters: int = 1000,
                     inner_dtype=None, inner_tol: float = 1e-2,
-                    max_outer: int = 30) -> EOCGResult:
+                    max_outer: int = 30, mesh=None,
+                    axis_name: str = "model", overlap: bool = True,
+                    backend: str = "jnp") -> EOCGResult:
     """Solve M x = b via the even-odd Schur complement with an (optionally
     mixed-precision) defect-correction CG.
 
@@ -120,6 +122,14 @@ def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
     ``jnp.bfloat16``), the inner CG streams fields rounded through that
     dtype and the outer loop re-computes the residual in f32 and restarts —
     the reliable-update scheme the paper's single/double CG uses.
+
+    With ``mesh`` set, the Schur operators and the whole inner CG run
+    T-sharded over the mesh's ``axis_name`` axis
+    (:class:`repro.lqcd.multichip_eo.ShardedWilsonEO`): halos overlap
+    interior compute (``overlap``), the inner ``while_loop`` stays inside
+    one ``shard_map`` with ``psum`` reductions only, and
+    ``backend="pallas"`` routes local hops through the autotuned Pallas
+    kernel on halo-padded blocks.
     """
     from repro.lqcd.eo import (eo_pack, eo_rhs, eo_unpack, pack_gauge,
                                reconstruct_odd, schur_matvec,
@@ -127,35 +137,60 @@ def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
 
     U_e, U_o = pack_gauge(U)
     b_e, b_o = eo_pack(b, 0), eo_pack(b, 1)
-    rhs_e = eo_rhs(U_e, U_o, b_e, b_o, kappa)
     b_norm = float(jnp.sqrt(_dot(b, b)))
+    # no low-precision pass gets below its own roundoff; full precision
+    # drives straight to tol in one outer sweep
+    eta = inner_tol if inner_dtype is not None else tol
 
-    def schur(v):
-        return schur_matvec(U_e, U_o, v, kappa)
+    if mesh is not None:
+        from repro.lqcd.multichip_eo import ShardedWilsonEO
+        hi = ShardedWilsonEO(U_e, U_o, kappa, mesh, axis_name=axis_name,
+                             overlap=overlap, backend=backend)
+        # the inner CG streams the *rounded* gauge field, like the
+        # single-device normal_lo path
+        lo = hi if inner_dtype is None else ShardedWilsonEO(
+            _round_complex(U_e, inner_dtype), _round_complex(U_o, inner_dtype),
+            kappa, mesh, axis_name=axis_name, overlap=overlap,
+            backend=backend)
+        rhs_e = hi.rhs(b_e, b_o)
+        schur = hi.schur
+        schur_dagger = hi.schur_dagger
 
-    def normal_hi(v):
-        return schur_matvec_dagger(U_e, U_o, schur(v), kappa)
-
-    if inner_dtype is not None:
-        U_e_lo = _round_complex(U_e, inner_dtype)
-        U_o_lo = _round_complex(U_o, inner_dtype)
-
-        def normal_lo(v):
-            v = _round_complex(v, inner_dtype)
-            av = schur_matvec(U_e_lo, U_o_lo, v, kappa)
-            av = _round_complex(av, inner_dtype)
-            out = schur_matvec_dagger(U_e_lo, U_o_lo, av, kappa)
-            return _round_complex(out, inner_dtype)
+        def run_inner(rhs_n, cap):
+            return lo.cg_normal(rhs_n, tol=eta, max_iters=cap,
+                                inner_dtype=inner_dtype)
     else:
-        normal_lo = normal_hi
+        rhs_e = eo_rhs(U_e, U_o, b_e, b_o, kappa)
+
+        def schur(v):
+            return schur_matvec(U_e, U_o, v, kappa)
+
+        def schur_dagger(v):
+            return schur_matvec_dagger(U_e, U_o, v, kappa)
+
+        def normal_hi(v):
+            return schur_dagger(schur(v))
+
+        if inner_dtype is not None:
+            U_e_lo = _round_complex(U_e, inner_dtype)
+            U_o_lo = _round_complex(U_o, inner_dtype)
+
+            def normal_lo(v):
+                v = _round_complex(v, inner_dtype)
+                av = schur_matvec(U_e_lo, U_o_lo, v, kappa)
+                av = _round_complex(av, inner_dtype)
+                out = schur_matvec_dagger(U_e_lo, U_o_lo, av, kappa)
+                return _round_complex(out, inner_dtype)
+        else:
+            normal_lo = normal_hi
+
+        def run_inner(rhs_n, cap):
+            return cg_solve(normal_lo, rhs_n, tol=eta, max_iters=cap)
 
     x_e = jnp.zeros_like(rhs_e)
     r_s = rhs_e                              # Schur-system residual
     total_inner = 0
     outer = 0
-    # no low-precision pass gets below its own roundoff; full precision
-    # drives straight to tol in one outer sweep
-    eta = inner_tol if inner_dtype is not None else tol
     while outer < max_outer and total_inner < max_iters:
         rel = float(jnp.sqrt(_dot(r_s, r_s))) / max(b_norm, 1e-30)
         if rel <= tol:
@@ -166,8 +201,8 @@ def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
         remaining = max_iters - total_inner
         round_cap = (remaining if inner_dtype is None
                      else min(remaining, max(10, max_iters // 5)))
-        rhs_n = schur_matvec_dagger(U_e, U_o, r_s, kappa)
-        inner = cg_solve(normal_lo, rhs_n, tol=eta, max_iters=round_cap)
+        rhs_n = schur_dagger(r_s)
+        inner = run_inner(rhs_n, round_cap)
         total_inner += int(inner.iters)
         x_e = x_e + inner.x
         r_s = rhs_e - schur(x_e)             # recompute in full precision
@@ -180,18 +215,26 @@ def solve_wilson_eo(U: jnp.ndarray, b: jnp.ndarray, kappa: float, *,
     return EOCGResult(x, total_inner, outer, rel, rel <= tol)
 
 
-def solve_dirac(U: jnp.ndarray, b: jnp.ndarray, kappa: float, cfg):
+def solve_dirac(U: jnp.ndarray, b: jnp.ndarray, kappa: float, cfg, *,
+                mesh=None, axis_name: str = "model", overlap: bool = True,
+                backend: str = "jnp"):
     """Config-driven entry point: dispatch on a ``repro.config.SolverConfig``.
 
     Returns a ``CGResult`` for the plain path and an ``EOCGResult`` for the
     even-odd paths (both expose ``.x``, ``.iters``, ``.rel_residual``,
-    ``.converged``).
+    ``.converged``).  ``mesh`` routes the even-odd paths through the
+    T-sharded multi-chip solver.
     """
     if cfg.preconditioner == "none":
+        if mesh is not None:
+            raise ValueError("mesh= requires an even-odd preconditioner "
+                             "(cfg.preconditioner != 'none')")
         return solve_wilson(U, b, kappa, tol=cfg.tol,
                             max_iters=cfg.max_iters)
     # float32 inner == working precision: not a mixed-precision solve
     inner = None if not cfg.mixed_precision else jnp.dtype(cfg.inner_dtype)
     return solve_wilson_eo(U, b, kappa, tol=cfg.tol,
                            max_iters=cfg.max_iters, inner_dtype=inner,
-                           inner_tol=cfg.inner_tol, max_outer=cfg.max_outer)
+                           inner_tol=cfg.inner_tol, max_outer=cfg.max_outer,
+                           mesh=mesh, axis_name=axis_name, overlap=overlap,
+                           backend=backend)

@@ -44,6 +44,18 @@ PROJ_M = jnp.stack([EYE4 - GAMMA[mu] for mu in range(4)])   # (1 - gamma_mu)
 PROJ_P = jnp.stack([EYE4 + GAMMA[mu] for mu in range(4)])   # (1 + gamma_mu)
 
 
+def mv(u, v):                         # U_ab psi_sb -> psi_sa
+    return jnp.einsum("...ab,...sb->...sa", u, v)
+
+
+def mv_dag(u, v):                     # (U^dagger)_ab psi_sb
+    return jnp.einsum("...ba,...sb->...sa", jnp.conj(u), v)
+
+
+def spin(proj, v):
+    return jnp.einsum("st,...ta->...sa", proj, v)
+
+
 def _sublattice_offset(shape: Tuple[int, ...], parity: int) -> np.ndarray:
     """s(y,z,t) = (y+z+t+parity) % 2 — the x offset of the first site of
     ``parity`` on each (y,z,t) line.  Static numpy, shape (1, Y, Z, T)."""
@@ -98,6 +110,33 @@ def _x_neighbors(src: jnp.ndarray, s_out: jnp.ndarray):
     return fwd, bwd
 
 
+def hops_spatial(U_out: jnp.ndarray, U_src: jnp.ndarray, psi: jnp.ndarray,
+                 s_out: jnp.ndarray) -> jnp.ndarray:
+    """x/y/z hop contributions of one parity block (compact layout).
+
+    ``s_out`` is the output-parity offset pattern: static numpy on the
+    single-device path, a traced (global-t aware) array on the T-sharded
+    path (:mod:`repro.lqcd.multichip_eo`) — x/y/z hops never cross the
+    sharded T axis, so they are identical in both settings.
+    """
+    # x direction: s-conditional rolls for spinors and the backward link
+    psi_fwd, psi_bwd = _x_neighbors(psi, s_out)
+    # the -x link sits at the source site = the bwd neighbour's own site
+    cond = s_out[..., None, None].astype(bool)
+    u_bwd_x = jnp.where(cond, U_src[0], jnp.roll(U_src[0], 1, axis=0))
+    out = spin(PROJ_M[0], mv(U_out[0], psi_fwd))
+    out = out + spin(PROJ_P[0], mv_dag(u_bwd_x, psi_bwd))
+
+    # y/z directions: plain rolls (axis 1..2 of the compact layout)
+    for mu in (1, 2):
+        psi_f = jnp.roll(psi, -1, axis=mu)
+        psi_b = jnp.roll(psi, 1, axis=mu)
+        u_b = jnp.roll(U_src[mu], 1, axis=mu)
+        out = out + spin(PROJ_M[mu], mv(U_out[mu], psi_f))
+        out = out + spin(PROJ_P[mu], mv_dag(u_b, psi_b))
+    return out
+
+
 def dslash_half(U_out: jnp.ndarray, U_src: jnp.ndarray, psi: jnp.ndarray,
                 src_parity: int) -> jnp.ndarray:
     """One parity block of D-slash: input ``psi`` lives on ``src_parity``
@@ -112,30 +151,15 @@ def dslash_half(U_out: jnp.ndarray, U_src: jnp.ndarray, psi: jnp.ndarray,
     s_out = jnp.asarray(_sublattice_offset(
         (2 * psi.shape[0],) + psi.shape[1:4], out_parity)[0])
 
-    def mv(u, v):                         # U_ab psi_sb -> psi_sa
-        return jnp.einsum("...ab,...sb->...sa", u, v)
+    out = hops_spatial(U_out, U_src, psi, s_out)
 
-    def mv_dag(u, v):                     # (U^dagger)_ab psi_sb
-        return jnp.einsum("...ba,...sb->...sa", jnp.conj(u), v)
-
-    def spin(proj, v):
-        return jnp.einsum("st,...ta->...sa", proj, v)
-
-    # x direction: s-conditional rolls for spinors and the backward link
-    psi_fwd, psi_bwd = _x_neighbors(psi, s_out)
-    # the -x link sits at the source site = the bwd neighbour's own site
-    cond = s_out[..., None, None].astype(bool)
-    u_bwd_x = jnp.where(cond, U_src[0], jnp.roll(U_src[0], 1, axis=0))
-    out = spin(PROJ_M[0], mv(U_out[0], psi_fwd))
-    out = out + spin(PROJ_P[0], mv_dag(u_bwd_x, psi_bwd))
-
-    # y/z/t directions: plain rolls (axis 1..3 of the compact layout)
-    for mu in (1, 2, 3):
-        psi_f = jnp.roll(psi, -1, axis=mu)
-        psi_b = jnp.roll(psi, 1, axis=mu)
-        u_b = jnp.roll(U_src[mu], 1, axis=mu)
-        out = out + spin(PROJ_M[mu], mv(U_out[mu], psi_f))
-        out = out + spin(PROJ_P[mu], mv_dag(u_b, psi_b))
+    # t direction: plain rolls (axis 3 of the compact layout)
+    mu = 3
+    psi_f = jnp.roll(psi, -1, axis=mu)
+    psi_b = jnp.roll(psi, 1, axis=mu)
+    u_b = jnp.roll(U_src[mu], 1, axis=mu)
+    out = out + spin(PROJ_M[mu], mv(U_out[mu], psi_f))
+    out = out + spin(PROJ_P[mu], mv_dag(u_b, psi_b))
     return out
 
 
