@@ -53,6 +53,7 @@ def benches():
         paper_tables.cluster_scale,
         paper_tables.cluster_online,
         paper_tables.cluster_hetero,
+        paper_tables.serve_replay,
         paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,

@@ -23,7 +23,7 @@ runs once over the drained batch.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Sequence, Tuple, Union
+from typing import Any, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -37,10 +37,25 @@ FINISH, FAIL, REPAIR, ARRIVE = range(4)
 
 @dataclass(frozen=True)
 class Arrival:
-    """One submission: the job and its absolute submit time [s]."""
+    """One submission: the job and its absolute submit time [s].
+
+    ``workload`` (optional) is the PR-4 ``Workload`` adapter the job
+    spec came from — the simulator places/fails/requeues the *job*, and
+    can execute the workload at the placement's resolved operating
+    point afterwards (``simulate(..., execute=True)``)."""
 
     t: float
     job: Job
+    workload: Optional[Any] = None
+
+
+def _one(t: float, x) -> Arrival:
+    if isinstance(x, Job):
+        return Arrival(t, x)
+    if hasattr(x, "job") and hasattr(x, "execute"):   # Workload protocol
+        return Arrival(t, x.job(), workload=x)
+    raise TypeError(f"cannot submit {type(x).__name__!r}: expected a Job "
+                    f"or a Workload (has job()/execute())")
 
 
 def _normalize(items: Iterable) -> List[Arrival]:
@@ -48,11 +63,18 @@ def _normalize(items: Iterable) -> List[Arrival]:
     for it in items:
         if isinstance(it, Arrival):
             out.append(it)
-        elif isinstance(it, Job):
-            out.append(Arrival(0.0, it))
+        elif isinstance(it, (Job,)) or (hasattr(it, "job")
+                                        and hasattr(it, "execute")):
+            out.append(_one(0.0, it))
         else:
-            t, job = it
-            out.append(Arrival(float(t), job))
+            try:
+                t, x = it
+            except TypeError:
+                raise TypeError(
+                    f"cannot submit {type(it).__name__!r}: expected an "
+                    f"Arrival, a Job, a Workload (has job()/execute()) or "
+                    f"a (t, job-or-workload) pair") from None
+            out.append(_one(float(t), x))
     if any(a.t < 0.0 for a in out):
         raise ValueError("arrival times must be non-negative")
     # stable: simultaneous submissions keep their submission order

@@ -154,7 +154,10 @@ def synchronous_rate(perf_scales: Sequence[float],
 # Workload kinds whose runtime the paper measures as clock-insensitive
 # (LQCD: <1.5% across the DPM ladder — memory-bound); everything else
 # (HPL, generic compute) scales with the engine's HPL perf curve.
-MEMORY_BOUND_KINDS = frozenset({"lqcd", "serve", "synthetic"})
+# serve_replay: decode-dominated request replay (repro.serve) — same
+# bandwidth-bound physics as serve.
+MEMORY_BOUND_KINDS = frozenset({"lqcd", "serve", "serve_replay",
+                                "synthetic"})
 
 _RATE_SCALE_CACHE: Dict[OperatingPoint, float] = {}
 

@@ -67,6 +67,9 @@ class SimResult:
     trace: PowerTrace
     stats: SimStats
     records: List[JobRecord] = field(default_factory=list)
+    # uid → WorkloadResult for completed Workload-backed arrivals, when
+    # simulate(..., execute=True) ran them at their placement's op
+    results: Dict[int, object] = field(default_factory=dict)
 
     @property
     def op(self) -> OperatingPoint:
@@ -275,7 +278,8 @@ def simulate(arrivals: ArrivalsLike, *,
              multi_gpu_penalty: float = MULTI_GPU_SLOWDOWN,
              dt_s: float = 5.0,
              network_w: Optional[float] = None,
-             usd_per_kwh: float = DEFAULT_USD_PER_KWH) -> SimResult:
+             usd_per_kwh: float = DEFAULT_USD_PER_KWH,
+             execute: bool = False) -> SimResult:
     """Run the online simulator and return schedule + trace + stats.
 
     ``arrivals`` is anything :func:`repro.cluster.events.as_arrivals`
@@ -290,6 +294,14 @@ def simulate(arrivals: ArrivalsLike, *,
     after ``max_requeues`` failure kills.  ``power_cap_w`` derates the
     operating point down the DPM ladder exactly like the batch
     scheduler, and the merged trace feeds Green500 L1/L2/L3 unchanged.
+
+    Arrivals may also be PR-4 ``Workload`` adapters (or ``(t,
+    workload)`` pairs) — their ``job()`` spec is what gets placed,
+    failed and requeued; with ``execute=True`` every *completed*
+    workload is additionally executed at its final placement's resolved
+    operating point and the results land in ``SimResult.results``
+    (uid-keyed) — e.g. per-request serve stats from a
+    :class:`repro.serve.replay.ReplayServeWorkload` shard.
     """
     arr = as_arrivals(arrivals)
     if not arr:
@@ -313,4 +325,13 @@ def simulate(arrivals: ArrivalsLike, *,
                           node_downtime_s=sim.downtime_s,
                           queue_peak=sim.queue_peak,
                           usd_per_kwh=usd_per_kwh)
-    return SimResult(schedule, trace, stats, sim.records)
+    results: Dict[int, object] = {}
+    if execute:
+        # last placement wins for requeued jobs — that attempt completed
+        op_by_job = {id(p.job): (p.op or sim.op) for p in sim.placements}
+        for a, rec in zip(arr, sim.records):
+            if a.workload is None or rec.state != COMPLETED:
+                continue
+            results[rec.uid] = a.workload.execute(
+                op_by_job.get(id(a.job), sim.op))
+    return SimResult(schedule, trace, stats, sim.records, results)

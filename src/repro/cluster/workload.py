@@ -88,12 +88,20 @@ def list_workloads() -> List[str]:
     return sorted(WORKLOAD_REGISTRY)
 
 
+# kinds whose adapter lives outside this module and registers on import
+_LAZY_KINDS = {"serve_replay": "repro.serve.replay"}
+
+
 def make_workload(kind: str, **kwargs) -> Workload:
+    if kind not in WORKLOAD_REGISTRY and kind in _LAZY_KINDS:
+        import importlib
+        importlib.import_module(_LAZY_KINDS[kind])
     try:
         cls = WORKLOAD_REGISTRY[kind]
     except KeyError:
         raise KeyError(f"unknown workload kind {kind!r}; registered: "
-                       f"{list_workloads()}") from None
+                       f"{list_workloads()} (+lazy: {sorted(_LAZY_KINDS)})"
+                       ) from None
     return cls(**kwargs)
 
 

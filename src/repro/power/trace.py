@@ -129,10 +129,12 @@ class PowerTrace:
             p += self._window_integral(net, t0, t1) / (t1 - t0)
         return p
 
-    def energy_j(self, include_network: bool = True,
-                 t0: Optional[float] = None,
-                 t1: Optional[float] = None) -> float:
-        """∫P dt — over [t0, t1] when given, else the whole trace."""
+    def energy_j(self, t0: Optional[float] = None,
+                 t1: Optional[float] = None, *,
+                 include_network: bool = True) -> float:
+        """∫P dt — over [t0, t1] when given (mirroring
+        :meth:`total_flops`'s windowed form, edge-interpolated), else
+        the whole trace."""
         total = self.power_w
         net = self.components.get(NETWORK)
         if include_network and net is not None:

@@ -79,6 +79,31 @@ def make_prefill_step(cfg: ModelConfig, mesh=None,
     return prefill_step
 
 
+def grow_decode_cache(cfg: ModelConfig, cache: dict, batch_size: int,
+                      total_len: int, *, dtype=None,
+                      quantize_kv_cache: bool = False) -> dict:
+    """Grow a prefill-sized decode cache to ``total_len`` positions.
+
+    Allocates a fresh full-length cache via ``init_decode_cache`` and
+    copies the prefilled entries into its leading slice (``pos`` moves
+    verbatim; same-shape entries — e.g. SSM states, whose shape doesn't
+    depend on sequence length — move without slicing).  Shared by the
+    ``launch.serve`` driver and the replay engine's executed admission
+    path (:class:`repro.serve.executed.ExecutedGroupRuntime`)."""
+    from repro.models import init_decode_cache
+    full = init_decode_cache(cfg, batch_size, total_len, dtype=dtype,
+                             quantize_kv_cache=quantize_kv_cache)
+    for k in cache:
+        if k == "pos":
+            full["pos"] = cache["pos"]
+        elif full[k].shape == cache[k].shape:
+            full[k] = cache[k]
+        else:
+            sl = tuple(slice(0, s) for s in cache[k].shape)
+            full[k] = full[k].at[sl].set(cache[k])
+    return full
+
+
 def make_decode_step(cfg: ModelConfig, mesh=None,
                      mesh_cfg: Optional[MeshConfig] = None,
                      moe_fsdp: bool = True, moe_ep_data: bool = False):

@@ -1,0 +1,27 @@
+"""Serve-traffic replay: recorded-request traces, continuous batching,
+per-request J/token accounting, and SLO-aware autoscaling.
+
+See ``docs/serving.md`` for the model and the stats glossary.
+"""
+from repro.serve.autoscale import (HOST_SHARE_W, AutoscalePolicy,
+                                   FleetResult, flat_out, run_fleet)
+from repro.serve.engine import (ContinuousBatchingEngine, Replica,
+                                RequestRecord, ServeCostModel, ServeResult,
+                                emit_step_intervals)
+from repro.serve.executed import ExecutedGroupRuntime
+from repro.serve.replay import ReplayServeWorkload, replay_shards
+from repro.serve.stats import (ServeStats, compute_serve_stats,
+                               request_energy_j, step_window_integral)
+from repro.serve.trace import (RequestTrace, constant_trace, diurnal_trace,
+                               poisson_trace)
+
+__all__ = [
+    "AutoscalePolicy", "ContinuousBatchingEngine", "ExecutedGroupRuntime",
+    "FleetResult",
+    "HOST_SHARE_W", "Replica", "ReplayServeWorkload", "RequestRecord",
+    "RequestTrace", "ServeCostModel", "ServeResult", "ServeStats",
+    "compute_serve_stats", "constant_trace", "diurnal_trace",
+    "emit_step_intervals", "flat_out", "poisson_trace",
+    "replay_shards", "request_energy_j", "run_fleet",
+    "step_window_integral",
+]

@@ -1,0 +1,72 @@
+"""Executed-group runtime: real jitted prefill/decode behind the
+replay engine's admission path.
+
+The analytic engine prices time and power; this hook makes the *model*
+real: when attached (``ContinuousBatchingEngine(runtime=...)``), every
+admitted prefill group runs the actual jitted prefill, grows the KV
+cache to the full generation length via
+:func:`repro.runtime.steps.grow_decode_cache` (the same helper the
+``launch.serve`` driver uses — the satellite extraction, reused here),
+and greedy-decodes the group, storing each request's generated tokens
+on its :class:`~repro.serve.engine.RequestRecord`.  Timing and energy
+stay analytic (deterministic, machine-independent); only the token
+content is executed.
+
+Smoke-scale, token-only model families (prompts are synthesized
+uniformly at random per group, seeded).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class ExecutedGroupRuntime:
+    """Real prefill + cache-grow + decode for one admitted group."""
+
+    def __init__(self, arch: str = "llama3-8b", *, smoke: bool = True,
+                 kv_int8: bool = False, seed: int = 0,
+                 params: Optional[dict] = None):
+        import jax
+        from repro.config import get_arch
+        from repro.models import init_params
+        from repro.runtime.steps import make_decode_step, make_prefill_step
+        entry = get_arch(arch)
+        self.cfg = entry.smoke() if smoke else entry.full()
+        if self.cfg.family in ("vlm", "encdec"):
+            raise ValueError(
+                f"ExecutedGroupRuntime supports token-only families; "
+                f"{arch!r} is {self.cfg.family!r}")
+        self.kv_int8 = kv_int8
+        self.params = params if params is not None \
+            else init_params(self.cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(make_prefill_step(
+            self.cfg, quantize_kv_cache=kv_int8))
+        self._decode = jax.jit(make_decode_step(self.cfg))
+        self._rng = np.random.default_rng(seed)
+
+    def run_group(self, prompt_len: int, gen_len: int,
+                  n: int) -> np.ndarray:
+        """Prefill ``n`` random prompts of ``prompt_len`` tokens, grow
+        the cache to ``prompt_len + gen_len``, greedy-decode
+        ``gen_len`` tokens.  Returns an ``(n, gen_len)`` int array."""
+        import jax
+        import jax.numpy as jnp
+        from repro.runtime.steps import grow_decode_cache
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray(
+            self._rng.integers(0, cfg.vocab_size, (n, prompt_len)),
+            jnp.int32)}
+        logits, cache = self._prefill(self.params, batch)
+        cache = grow_decode_cache(cfg, cache, n, prompt_len + gen_len,
+                                  quantize_kv_cache=self.kv_int8)
+        out = []
+        tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+        for _ in range(gen_len):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params,
+                                         tok.astype(jnp.int32), cache)
+            tok = jnp.argmax(logits[:, :cfg.vocab_size], axis=-1)[:, None]
+        jax.block_until_ready(logits)
+        return np.concatenate(out, axis=1)
