@@ -54,6 +54,7 @@ def benches():
         paper_tables.cluster_online,
         paper_tables.cluster_hetero,
         paper_tables.serve_replay,
+        paper_tables.cluster_resilience,
         paper_tables.cg_energy_to_solution,
         kernel_bench.dgemm_bench,
         kernel_bench.rmsnorm_bench,

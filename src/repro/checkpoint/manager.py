@@ -9,18 +9,32 @@ Design for 1000+ nodes, scaled down honestly for this container:
     ``jax.device_put`` against the new NamedSharding — this is what makes
     elastic scaling (Nx pods -> (N-1)x pods) possible after a pod loss;
   * ``keep`` bounds disk usage; a half-written step directory is detected
-    via the manifest-last protocol and ignored on restore (crash safety).
+    via the manifest-last protocol and ignored on restore (crash safety);
+  * a checkpoint that *looks* complete but is corrupt (truncated leaf
+    file, shape mismatch against its own manifest, unreadable JSON)
+    raises :class:`CheckpointError` from ``restore`` —
+    ``restore_latest`` instead walks back to the newest retained step
+    that loads cleanly (with a warning), so a mid-restart disk hiccup
+    costs one checkpoint interval, not the run;
+  * background-write failures (disk full, permissions) are captured and
+    re-raised from the next ``wait()``/``save()`` instead of dying
+    silently on the writer thread.
 """
 from __future__ import annotations
 
 import json
 import shutil
 import threading
+import warnings
 from pathlib import Path
 from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint directory is unreadable or fails validation."""
 
 
 def _flatten(tree: Any) -> List[Tuple[str, Any]]:
@@ -39,6 +53,7 @@ class CheckpointManager:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree: Any, blocking: bool = False) -> None:
@@ -56,23 +71,26 @@ class CheckpointManager:
         self.wait()
 
         def write():
-            d = self.dir / f"step_{step:08d}"
-            tmp = self.dir / f".tmp_step_{step:08d}"
-            if tmp.exists():
-                shutil.rmtree(tmp)
-            tmp.mkdir()
-            manifest = {"step": step, "leaves": {}}
-            for i, (name, arr, orig) in enumerate(host):
-                fn = f"leaf_{i:05d}.npy"
-                np.save(tmp / fn, arr)
-                manifest["leaves"][name] = {
-                    "file": fn, "shape": list(arr.shape), "dtype": orig}
-            # manifest last: its presence marks the checkpoint complete
-            (tmp / "manifest.json").write_text(json.dumps(manifest))
-            if d.exists():
-                shutil.rmtree(d)
-            tmp.rename(d)
-            self._gc()
+            try:
+                d = self.dir / f"step_{step:08d}"
+                tmp = self.dir / f".tmp_step_{step:08d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir()
+                manifest = {"step": step, "leaves": {}}
+                for i, (name, arr, orig) in enumerate(host):
+                    fn = f"leaf_{i:05d}.npy"
+                    np.save(tmp / fn, arr)
+                    manifest["leaves"][name] = {
+                        "file": fn, "shape": list(arr.shape), "dtype": orig}
+                # manifest last: its presence marks the checkpoint complete
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                if d.exists():
+                    shutil.rmtree(d)
+                tmp.rename(d)
+                self._gc()
+            except BaseException as e:     # surfaced by the next wait()
+                self._write_error = e
 
         self._thread = threading.Thread(target=write, daemon=True)
         self._thread.start()
@@ -80,8 +98,14 @@ class CheckpointManager:
             self.wait()
 
     def wait(self) -> None:
+        """Join the in-flight write; re-raise any failure it hit (an
+        async ``save`` must not be lost in the thread)."""
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
+        if self._write_error is not None:
+            err, self._write_error = self._write_error, None
+            raise CheckpointError(
+                f"background checkpoint write failed: {err}") from err
 
     def _gc(self) -> None:
         steps = sorted(self.dir.glob("step_*"))
@@ -89,23 +113,49 @@ class CheckpointManager:
             shutil.rmtree(old, ignore_errors=True)
 
     # -- restore -------------------------------------------------------------
-    def latest_step(self) -> Optional[int]:
-        steps = []
+    def steps(self) -> List[int]:
+        """All retained manifest-complete steps, oldest first."""
+        out = []
         for d in self.dir.glob("step_*"):
             if (d / "manifest.json").exists():     # complete checkpoints only
-                steps.append(int(d.name.split("_")[1]))
-        return max(steps) if steps else None
+                out.append(int(d.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.steps()
+        return steps[-1] if steps else None
 
     def restore(self, step: int, like: Any, shardings: Any = None) -> Any:
         """Load into the structure of ``like``; optionally reshard onto a
-        (possibly different) mesh via ``shardings`` (same pytree shape)."""
+        (possibly different) mesh via ``shardings`` (same pytree shape).
+
+        Raises :class:`CheckpointError` when the step directory is
+        corrupt: unreadable manifest, a missing leaf, a truncated
+        ``.npy``, or a leaf whose shape disagrees with the manifest."""
         d = self.dir / f"step_{step:08d}"
-        manifest = json.loads((d / "manifest.json").read_text())
+        try:
+            manifest = json.loads((d / "manifest.json").read_text())
+        except (OSError, ValueError) as e:
+            raise CheckpointError(
+                f"step {step}: unreadable manifest in {d}: {e}") from e
         flat_names = [name for name, _ in _flatten(like)]
         leaves = []
         for name in flat_names:
-            meta = manifest["leaves"][name]
-            arr = np.load(d / meta["file"])
+            try:
+                meta = manifest["leaves"][name]
+                arr = np.load(d / meta["file"])
+            except KeyError as e:
+                raise CheckpointError(
+                    f"step {step}: leaf {name!r} missing from manifest"
+                    ) from e
+            except (OSError, ValueError, EOFError) as e:
+                raise CheckpointError(
+                    f"step {step}: leaf {name!r} unreadable "
+                    f"(truncated/corrupt file): {e}") from e
+            if list(arr.shape) != list(meta.get("shape", arr.shape)):
+                raise CheckpointError(
+                    f"step {step}: leaf {name!r} shape {list(arr.shape)} != "
+                    f"manifest {meta['shape']} (truncated write?)")
             leaves.append(arr)
         tdef = jax.tree_util.tree_structure(like)
         tree = jax.tree_util.tree_unflatten(tdef, leaves)
@@ -119,3 +169,20 @@ class CheckpointManager:
                 lambda a, l: jax.numpy.asarray(a).astype(l.dtype),
                 tree, like)
         return tree
+
+    def restore_latest(self, like: Any, shardings: Any = None,
+                       ) -> Tuple[Optional[int], Any]:
+        """``(step, tree)`` from the newest retained checkpoint that
+        loads cleanly.  A corrupt latest step (truncated mid-crash) is
+        skipped with a warning and the previous retained step is tried —
+        a restart loses one checkpoint interval instead of raising
+        mid-restore.  ``(None, None)`` when nothing restorable exists."""
+        for step in reversed(self.steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except CheckpointError as e:
+                warnings.warn(
+                    f"checkpoint step {step} is corrupt, falling back to "
+                    f"the previous retained step: {e}",
+                    RuntimeWarning, stacklevel=2)
+        return None, None

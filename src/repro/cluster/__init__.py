@@ -14,6 +14,8 @@ cluster-level :class:`repro.power.PowerTrace`:
   :mod:`repro.cluster.sim`        online discrete-event simulator
                                   (arrival queues, backfill, failures)
   :mod:`repro.cluster.events`     arrival sources (Poisson / trace)
+  :mod:`repro.cluster.resilience` Daly-interval CheckpointPolicy,
+                                  per-attempt checkpoint schedules
   :mod:`repro.cluster.stats`      RAPS-style end-of-run report
 
 Quick use::
@@ -76,6 +78,12 @@ from repro.cluster.events import (  # noqa: F401
     TraceArrivals,
     as_arrivals,
     batch_arrivals,
+)
+from repro.cluster.resilience import (  # noqa: F401
+    AttemptPlan,
+    CheckpointPolicy,
+    daly_interval_s,
+    job_state_bytes,
 )
 from repro.cluster.stats import JobRecord, SimStats  # noqa: F401
 from repro.cluster.sim import SimResult, simulate  # noqa: F401

@@ -49,7 +49,10 @@ class Job:
     ``work_units`` is relative wall-clock on one reference chip at the
     reference operating point; ``preferred_op`` lets a workload ask for
     its own operating point (the scheduler may still derate it to meet a
-    cluster power cap)."""
+    cluster power cap).  ``state_bytes`` is the checkpointable state a
+    restart needs (``Workload.state_bytes()`` fills it in); ``None``
+    falls back to the resident working set — see
+    :func:`repro.cluster.resilience.job_state_bytes`."""
 
     name: str
     mem_gb: float
@@ -57,6 +60,7 @@ class Job:
     shardable: bool = True
     preferred_op: Optional[OperatingPoint] = None
     kind: str = "generic"
+    state_bytes: Optional[float] = None
 
 
 @dataclass
@@ -186,7 +190,9 @@ def op_rate_scale(job: Job, op: Optional[OperatingPoint]) -> float:
 def _commit_placement(job: Job, pool: List[Chip],
                       penalty: float, *,
                       now: Optional[float] = None,
-                      op: Optional[OperatingPoint] = None) -> Placement:
+                      op: Optional[OperatingPoint] = None,
+                      work_scale: float = 1.0,
+                      extra_s: float = 0.0) -> Placement:
     """Book ``job`` onto ``pool``: earliest common start, synchronous-step
     pacing, busy_until advanced on every chip.  The one placement
     definition the Scheduler, the online simulator, and the legacy flat
@@ -195,19 +201,34 @@ def _commit_placement(job: Job, pool: List[Chip],
     leaves it unset.  ``op`` is the job's resolved operating point: it
     both rides on the placement (the trace engine prices each interval
     at its placement's point) and paces the work via
-    :func:`op_rate_scale`."""
+    :func:`op_rate_scale`.
+
+    The resilience layer books *partial* attempts: ``work_scale`` is
+    the fraction of ``work_units`` still owed after checkpoint-restored
+    progress, and ``extra_s`` appends checkpoint-write pause seconds to
+    the duration.  ``rate_per_chip`` then reflects the *effective*
+    delivered rate over the whole attempt (compute work / total wall),
+    so the trace engine's FLOPS stay honest during write pauses.  The
+    defaults leave the arithmetic bit-identical to the pre-resilience
+    path."""
     start = max(c.busy_until for c in pool)
     if now is not None and now > start:
         start = now
     rate = (synchronous_rate([c.perf_scale for c in pool], penalty)
             * op_rate_scale(job, op))
-    dur = job.work_units / rate
+    work = job.work_units if work_scale == 1.0 \
+        else job.work_units * work_scale
+    dur = work / rate
+    rate_chip = rate / len(pool)
+    if extra_s > 0.0:
+        dur += extra_s
+        rate_chip = (work / dur) / len(pool)
     for c in pool:
         c.busy_until = start + dur
     return Placement(job, [c.chip_id for c in pool], start, start + dur,
                      len(pool) > 1,
                      nodes=tuple(sorted({c.node_id for c in pool})),
-                     rate_per_chip=rate / len(pool), op=op)
+                     rate_per_chip=rate_chip, op=op)
 
 
 def _reference_op(placements: Sequence[Placement],

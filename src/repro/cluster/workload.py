@@ -55,11 +55,21 @@ class Workload(Protocol):
     ``job()`` is the placement spec; ``execute(op)`` runs the workload's
     real (smoke-scale) or analytic code path at the given operating
     point, emits telemetry into ``recorder`` (or a private bus), and
-    returns a :class:`WorkloadResult`."""
+    returns a :class:`WorkloadResult`.
+
+    ``state_bytes()`` is the resilience surface: how many bytes a
+    checkpoint of this workload streams to storage
+    (:class:`repro.cluster.resilience.CheckpointPolicy` prices the
+    Daly interval from it).  ``0.0`` means *stateless* — nothing worth
+    checkpointing (e.g. serving, whose KV cache is reconstructible) —
+    and disables checkpoint scheduling for the job entirely."""
 
     name: str
 
     def job(self) -> Job:
+        ...
+
+    def state_bytes(self) -> float:
         ...
 
     def execute(self, op: OperatingPoint, *,
@@ -168,7 +178,12 @@ class HPLWorkload:
         op = OperatingPoint.green500() if self.cfg.mode == "efficiency" \
             else OperatingPoint(f_mhz=900.0)
         return Job(self.name, self.mem_gb, self.work_units,
-                   shardable=True, preferred_op=op, kind=self.kind)
+                   shardable=True, preferred_op=op, kind=self.kind,
+                   state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        # the in-place factored matrix IS the restart state
+        return self.mem_gb * 1e9
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -213,7 +228,12 @@ class LQCDSolveWorkload:
         return Job(self.name, self.lattice.mem_gb,
                    work_units=self.lattice.volume / 4096.0,
                    shardable=True, preferred_op=OperatingPoint.green500(),
-                   kind=self.kind)
+                   kind=self.kind, state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        # gauge configuration + current solver iterate — the GPU-resident
+        # lattice working set restarts the trajectory
+        return self.lattice.mem_gb * 1e9
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -317,7 +337,12 @@ class TrainWorkload:
         return Job(self.name, mem_gb,
                    work_units=self.steps * ac.flops / 1e12,
                    shardable=True, preferred_op=self.preferred_op,
-                   kind=self.kind)
+                   kind=self.kind, state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        # params + optimizer moments (activations are recomputed on
+        # restart) — the roofline HBM footprint is the honest upper bound
+        return float(max(self._cost().hbm_bytes, 1e8))
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -384,7 +409,14 @@ class ServeWorkload:
         mem_gb = max((pre.hbm_bytes + dec.hbm_bytes) / 1e9, 0.1)
         work = (pre.flops + self.gen * dec.flops) / 1e12
         return Job(self.name, mem_gb, work_units=work, shardable=True,
-                   preferred_op=self.preferred_op, kind=self.kind)
+                   preferred_op=self.preferred_op, kind=self.kind,
+                   state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        # serving is stateless (weights are re-loadable, the KV cache is
+        # reconstructible): nothing to checkpoint, retries are the
+        # resilience story (repro.serve.autoscale RetryPolicy)
+        return 0.0
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:
@@ -432,7 +464,10 @@ class SyntheticWorkload:
     def job(self) -> Job:
         return Job(self.name, self.mem_gb, self.work_units,
                    shardable=True, preferred_op=self.preferred_op,
-                   kind=self.kind)
+                   kind=self.kind, state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        return self.mem_gb * 1e9
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:

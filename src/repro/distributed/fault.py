@@ -54,12 +54,34 @@ class WeibullFailureModel:
         """One uptime sample [s] (time from in-service to failure)."""
         return float(self.scale_s * rng.weibull(self.shape))
 
-    def node_outages(self, rng: np.random.Generator, n_nodes: int,
+    def node_streams(self, seed: int,
+                     n_nodes: int) -> List[np.random.Generator]:
+        """Independent per-node RNG streams (``SeedSequence``-spawned).
+
+        Node ``i``'s uptime sequence depends only on ``(seed, i)`` —
+        never on how draws for other nodes interleave — so the
+        simulator's lazy per-repair draws and the eager
+        :meth:`node_outages` iterator produce *identical* ``(node,
+        t_down, t_up)`` sequences from the same seed (pinned in
+        ``tests/test_resilience.py``)."""
+        ss = np.random.SeedSequence(seed)
+        return [np.random.default_rng(child)
+                for child in ss.spawn(n_nodes)]
+
+    def node_outages(self, seed, n_nodes: int,
                      horizon_s: float) -> Iterator[Tuple[int, float, float]]:
         """All ``(node, t_down, t_up)`` outages before ``horizon_s`` —
         the eager counterpart of the simulator's lazy per-repair draws
-        (planning/analysis use)."""
+        (planning/analysis use).  ``seed`` is an int (per-node
+        :meth:`node_streams`, matching the simulator draw-for-draw) or
+        a single shared ``np.random.Generator`` (sequential draws, for
+        quick statistics)."""
+        if isinstance(seed, np.random.Generator):
+            streams = [seed] * n_nodes
+        else:
+            streams = self.node_streams(int(seed), n_nodes)
         for node in range(n_nodes):
+            rng = streams[node]
             t = self.draw_uptime_s(rng)
             while t < horizon_s:
                 yield node, t, t + self.repair_s

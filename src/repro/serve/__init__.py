@@ -4,7 +4,8 @@ per-request J/token accounting, and SLO-aware autoscaling.
 See ``docs/serving.md`` for the model and the stats glossary.
 """
 from repro.serve.autoscale import (HOST_SHARE_W, AutoscalePolicy,
-                                   FleetResult, flat_out, run_fleet)
+                                   FleetResult, RetryPolicy, flat_out,
+                                   run_fleet)
 from repro.serve.engine import (ContinuousBatchingEngine, Replica,
                                 RequestRecord, ServeCostModel, ServeResult,
                                 emit_step_intervals)
@@ -19,7 +20,8 @@ __all__ = [
     "AutoscalePolicy", "ContinuousBatchingEngine", "ExecutedGroupRuntime",
     "FleetResult",
     "HOST_SHARE_W", "Replica", "ReplayServeWorkload", "RequestRecord",
-    "RequestTrace", "ServeCostModel", "ServeResult", "ServeStats",
+    "RequestTrace", "RetryPolicy", "ServeCostModel", "ServeResult",
+    "ServeStats",
     "compute_serve_stats", "constant_trace", "diurnal_trace",
     "emit_step_intervals", "flat_out", "poisson_trace",
     "replay_shards", "request_energy_j", "run_fleet",

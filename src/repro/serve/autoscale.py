@@ -32,12 +32,15 @@ at equal SLO compliance, is the benchmark gate
 """
 from __future__ import annotations
 
+import heapq
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from itertools import count
 from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.distributed.fault import WeibullFailureModel
 from repro.power.layers import P_HOST_DC_W
 from repro.power.model import OperatingPoint
 from repro.power.trace import PowerTrace, TraceRecorder
@@ -48,6 +51,30 @@ from repro.serve.trace import RequestTrace
 
 #: per-replica share of the node host board (4 accelerators per host)
 HOST_SHARE_W = P_HOST_DC_W / 4.0
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """How spilled requests are retried after a replica failure: capped
+    exponential backoff (``backoff_s · 2^(attempt-1)``, clipped at
+    ``backoff_cap_s``) onto the surviving replicas, against a per-request
+    ``max_retries`` budget — exhausting it marks the request
+    ``gave_up`` (an honest SLO miss in :class:`ServeStats`)."""
+
+    max_retries: int = 3
+    backoff_s: float = 0.5
+    backoff_cap_s: float = 8.0
+
+    def __post_init__(self):
+        if self.max_retries < 0 or self.backoff_s <= 0.0 \
+                or self.backoff_cap_s < self.backoff_s:
+            raise ValueError("max_retries must be ≥ 0, backoff_s positive "
+                             "and backoff_cap_s ≥ backoff_s")
+
+    def delay_s(self, attempt: int) -> float:
+        """Backoff before retry ``attempt`` (1-based)."""
+        return min(self.backoff_s * 2.0 ** (max(attempt, 1) - 1),
+                   self.backoff_cap_s)
 
 
 @dataclass(frozen=True)
@@ -94,6 +121,9 @@ class FleetResult:
     t_off: float
     span_s: float
     busy_w_per_replica: float = 0.0
+    replica_failures: int = 0
+    # every (rid, t_down, t_up) injected during the run
+    outages: List[Tuple[int, float, float]] = field(default_factory=list)
 
     @property
     def n_live_peak(self) -> int:
@@ -141,11 +171,27 @@ def _merge_fleet(replicas: List[Replica], live_t: np.ndarray,
 def run_fleet(cost: ServeCostModel, requests: RequestTrace,
               policy: AutoscalePolicy, *,
               slo_s: Optional[float] = None,
-              recorder: Optional[TraceRecorder] = None) -> FleetResult:
+              recorder: Optional[TraceRecorder] = None,
+              failures: Optional[WeibullFailureModel] = None,
+              retry: Optional[RetryPolicy] = None,
+              failure_seed: int = 0) -> FleetResult:
     """Replay ``requests`` through a fleet under ``policy`` and return
-    the merged telemetry + stats (see module docstring)."""
+    the merged telemetry + stats (see module docstring).
+
+    ``failures`` injects per-replica Weibull kills (seeded by
+    ``failure_seed``, one RNG stream per slot): a dead replica spills
+    its queued + in-flight requests, which are retried under ``retry``
+    (default :class:`RetryPolicy`) with capped exponential backoff onto
+    the survivors; the slot returns after ``repair_s``.  Without
+    ``failures`` the original event loop runs unchanged (bit-identical
+    baseline)."""
     if not len(requests):
         raise ValueError("empty request trace: nothing to serve")
+    if failures is not None:
+        return _run_fleet_failures(cost, requests, policy, slo_s=slo_s,
+                                   recorder=recorder, failures=failures,
+                                   retry=retry or RetryPolicy(),
+                                   failure_seed=failure_seed)
     probe = Replica(cost, op=policy.op, mode=policy.mode)
     worst_w = probe.p_busy + HOST_SHARE_W
     n_eff = policy.n_max
@@ -269,3 +315,235 @@ def run_fleet(cost: ServeCostModel, requests: RequestTrace,
             f"{stats.peak_power_w:.1f} W > {policy.power_cap_w:.1f} W")
     return FleetResult(policy, records, trace, stats, live_t, live_n,
                        t_off, span, busy_w_per_replica=probe.p_busy)
+
+
+# event priorities at equal timestamps: repairs land before the failure
+# clock restarts, retries/arrivals see post-repair capacity, controller
+# ticks observe the settled state (arrival-before-tick matches the
+# no-failure loop's ``t_arr <= t_tick`` ordering)
+_PRIO = {"repair": 0, "fail": 1, "retry": 2, "arrive": 3, "tick": 4}
+
+
+def _run_fleet_failures(cost: ServeCostModel, requests: RequestTrace,
+                        policy: AutoscalePolicy, *,
+                        slo_s: Optional[float],
+                        recorder: Optional[TraceRecorder],
+                        failures: WeibullFailureModel,
+                        retry: RetryPolicy,
+                        failure_seed: int) -> FleetResult:
+    """The fault-injected twin of :func:`run_fleet`'s event loop:
+    arrivals, controller ticks, per-slot Weibull kills, repairs and
+    retry wake-ups merged on one event heap."""
+    probe = Replica(cost, op=policy.op, mode=policy.mode)
+    worst_w = probe.p_busy + HOST_SHARE_W
+    n_eff = policy.n_max
+    if policy.power_cap_w is not None:
+        n_allowed = int(math.floor(policy.power_cap_w / worst_w + 1e-9))
+        if n_allowed < policy.n_min:
+            raise ValueError(
+                f"power cap {policy.power_cap_w:.0f} W admits only "
+                f"{n_allowed} replicas at {worst_w:.0f} W each < n_min="
+                f"{policy.n_min}")
+        n_eff = min(n_eff, n_allowed)
+
+    replicas = [Replica(cost, op=policy.op, mode=policy.mode, rid=i,
+                        live=False)
+                for i in range(policy.n_max)]
+    n_init = policy.n_min if policy.autoscale else n_eff
+    available_at = [math.inf] * policy.n_max
+    for i in range(n_init):
+        replicas[i].live = True
+        available_at[i] = 0.0
+    live_events: List[Tuple[float, int]] = [(0.0, n_init)]
+
+    records = [RequestRecord(i, float(requests.arrival_s[i]),
+                             int(requests.prompt_len[i]),
+                             int(requests.gen_len[i]))
+               for i in range(len(requests))]
+
+    rngs = failures.node_streams(failure_seed, policy.n_max)
+    down_until = [0.0] * policy.n_max
+    revive = [False] * policy.n_max   # was live when killed → relive
+    outages: List[Tuple[int, float, float]] = []
+    replica_failures = 0
+    arrivals_left = len(records)
+    retries_pending = 0
+
+    heap: List[tuple] = []
+    seq = count()
+
+    def push(t: float, kind: str, payload=None) -> None:
+        heapq.heappush(heap, (t, _PRIO[kind], next(seq), kind, payload))
+
+    for rec in records:
+        push(rec.arrival_s, "arrive", rec)
+    for rid in range(policy.n_max):
+        push(failures.draw_uptime_s(rngs[rid]), "fail", rid)
+    push(policy.dt_ctrl_s, "tick", None)
+
+    def advance_all(t: float) -> None:
+        for r in replicas:
+            if r.t < t:
+                r.advance(t)
+
+    def n_live() -> int:
+        return sum(1 for r in replicas if r.live)
+
+    def route(rec: RequestRecord, t: float) -> bool:
+        live = [r for r in replicas if r.live]
+        if not live:
+            return False
+        ready = [r for r in live if available_at[r.rid] <= t]
+        pool = ready or live
+        target = min(pool, key=lambda r: (r.load(), r.rid))
+        target.submit(rec)
+        return True
+
+    def wake_spare(t: float) -> None:
+        """Emergency replacement: bring up the lowest-id parked,
+        repaired slot (capacity lost to a kill comes back before the
+        controller would react)."""
+        if n_live() >= n_eff:
+            return
+        spare = [r for r in replicas
+                 if not r.live and down_until[r.rid] <= t]
+        if spare:
+            r_on = min(spare, key=lambda r: r.rid)
+            r_on.live = True
+            available_at[r_on.rid] = t + policy.startup_s
+            live_events.append((t, n_live()))
+
+    def submit_or_park(rec: RequestRecord, t: float) -> None:
+        """Route now, or — with every slot dead — park on the retry
+        heap (no budget consumed: the outage is the fleet's fault)."""
+        nonlocal retries_pending
+        if not route(rec, t):
+            wake_spare(t)
+            if not route(rec, t):
+                retries_pending += 1
+                push(t + retry.backoff_s, "retry", rec)
+
+    up_count = down_count = 0
+
+    def control(t: float) -> None:
+        nonlocal up_count, down_count
+        if not policy.autoscale:
+            return
+        live = [r for r in replicas if r.live]
+        n_now = len(live)
+        slots = n_now * replicas[0].max_batch
+        backlog = sum(r.load() for r in live)
+        util = sum(len(r.inflight) for r in live) / max(slots, 1)
+        if backlog > policy.up_backlog * slots:
+            up_count += 1
+            down_count = 0
+        elif util < policy.down_util:
+            down_count += 1
+            up_count = 0
+        else:
+            up_count = down_count = 0
+        if up_count >= policy.hold_up and n_now < n_eff:
+            spare = [r for r in replicas
+                     if not r.live and down_until[r.rid] <= t]
+            if spare:
+                r_on = min(spare, key=lambda r: r.rid)
+                r_on.live = True
+                available_at[r_on.rid] = t + policy.startup_s
+                live_events.append((t, n_now + 1))
+                up_count = 0
+        elif down_count >= policy.hold_down and n_now > policy.n_min:
+            idle = [r for r in live if r.load() == 0
+                    and available_at[r.rid] <= t]
+            if idle:
+                r_off = max(idle, key=lambda r: r.rid)
+                r_off.live = False
+                available_at[r_off.rid] = math.inf
+                live_events.append((t, n_now - 1))
+                down_count = 0
+
+    while heap:
+        t, _, _, kind, payload = heapq.heappop(heap)
+        if kind == "repair":
+            rid = payload
+            if revive[rid] and n_live() < n_eff:
+                r_on = replicas[rid]
+                r_on.live = True
+                available_at[rid] = t + policy.startup_s
+                live_events.append((t, n_live()))
+            revive[rid] = False
+            # the slot's failure clock restarts when it is back in
+            # service — a renewal process per slot, like the cluster sim
+            push(t + failures.draw_uptime_s(rngs[rid]), "fail", rid)
+        elif kind == "fail":
+            rid = payload
+            advance_all(t)
+            down_until[rid] = t + failures.repair_s
+            outages.append((rid, t, down_until[rid]))
+            push(down_until[rid], "repair", rid)
+            r = replicas[rid]
+            if r.live:
+                replica_failures += 1
+                lost = r.fail()
+                revive[rid] = True
+                available_at[rid] = math.inf
+                live_events.append((t, n_live()))
+                if n_live() < policy.n_min:
+                    wake_spare(t)
+                for rec in lost:
+                    rec.retries += 1
+                    if rec.retries > retry.max_retries:
+                        rec.gave_up = True
+                    else:
+                        retries_pending += 1
+                        push(t + retry.delay_s(rec.retries), "retry", rec)
+        elif kind == "retry":
+            retries_pending -= 1
+            advance_all(t)
+            submit_or_park(payload, t)
+        elif kind == "arrive":
+            arrivals_left -= 1
+            advance_all(t)
+            submit_or_park(payload, t)
+        else:                                        # tick
+            advance_all(t)
+            control(t)
+            if (arrivals_left or retries_pending
+                    or any(r.load() for r in replicas)):
+                push(t + policy.dt_ctrl_s, "tick", None)
+        if (not arrivals_left and not retries_pending
+                and not any(r.load() for r in replicas)):
+            break
+
+    for r in replicas:
+        r.drain()
+    horizon = max(r.t for r in replicas)
+    for r in replicas:
+        if r.t < horizon:
+            r.advance(horizon)
+
+    live_t = np.array([e[0] for e in live_events])
+    live_n = np.array([float(e[1]) for e in live_events])
+    intervals, host = _merge_fleet(replicas, live_t, live_n)
+    bus = recorder if recorder is not None \
+        else TraceRecorder(source=f"serve.fleet.{policy.name}")
+    t_off = bus.t_last
+    emit_step_intervals(bus, intervals, t_off=t_off,
+                        components={"host": host},
+                        aux={"n_live": live_n[np.clip(
+                            np.searchsorted(live_t, np.array(
+                                [0.5 * (iv[0] + iv[1])
+                                 for iv in intervals]), side="right") - 1,
+                            0, len(live_t) - 1)]})
+    trace = bus.trace()
+    span = intervals[-1][1]
+    stats = compute_serve_stats(records, trace, t0=t_off, span=span,
+                                slo_s=slo_s,
+                                replica_failures=replica_failures)
+    if policy.power_cap_w is not None \
+            and stats.peak_power_w > policy.power_cap_w + 1e-6:
+        raise AssertionError(
+            f"policy {policy.name!r} exceeded its own power cap: "
+            f"{stats.peak_power_w:.1f} W > {policy.power_cap_w:.1f} W")
+    return FleetResult(policy, records, trace, stats, live_t, live_n,
+                       t_off, span, busy_w_per_replica=probe.p_busy,
+                       replica_failures=replica_failures, outages=outages)

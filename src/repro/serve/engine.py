@@ -115,6 +115,8 @@ class RequestRecord:
     done_s: Optional[float] = None         # last decode step
     replica: int = 0
     tokens: Optional[np.ndarray] = None    # real tokens (executed runtime)
+    retries: int = 0                       # replica-failure resubmissions
+    gave_up: bool = False                  # retry budget exhausted (dropped)
 
     @property
     def wait_s(self) -> Optional[float]:
@@ -272,6 +274,25 @@ class Replica:
 
     def drain(self) -> None:
         self.advance(math.inf)
+
+    # -- failure injection ---------------------------------------------------
+
+    def fail(self) -> List[RequestRecord]:
+        """Kill the replica at its current clock: power off and spill
+        every queued + in-flight request for the caller to retry
+        elsewhere (:mod:`repro.serve.autoscale`).  Generation has no
+        durable state, so a spilled request restarts from its prompt —
+        admit/first-token stamps are cleared and re-set on the retry
+        prefill (the power its dead work burned stays on the trace)."""
+        lost = [e[0] for e in self.inflight] + list(self.queue)
+        for e in self.inflight:
+            e[0].admit_s = None
+            e[0].first_token_s = None
+        self.inflight = []
+        self.queue = []
+        self.kv_used = 0
+        self.live = False
+        return lost
 
 
 def emit_step_intervals(recorder: TraceRecorder, intervals, *,

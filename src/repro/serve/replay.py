@@ -97,7 +97,12 @@ class ReplayServeWorkload:
         return Job(self.name, mem_gb,
                    work_units=self._reference().span_s,
                    shardable=False, preferred_op=self.preferred_op,
-                   kind=self.kind)
+                   kind=self.kind, state_bytes=self.state_bytes())
+
+    def state_bytes(self) -> float:
+        # serving is stateless: dropped requests are retried, not
+        # restored — checkpointing never triggers for replay shards
+        return 0.0
 
     def execute(self, op: OperatingPoint, *,
                 recorder: Optional[TraceRecorder] = None) -> WorkloadResult:

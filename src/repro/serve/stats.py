@@ -87,6 +87,10 @@ class ServeStats:
     peak_power_w: float
     slo_s: Optional[float] = None
     slo_compliance: float = 1.0
+    #: replica-failure resilience surface (all 0 without fault injection)
+    retries: int = 0                 # failure-driven resubmissions
+    gave_up: int = 0                 # requests that exhausted the budget
+    replica_failures: int = 0        # live-replica kills during the run
 
     @property
     def j_per_request(self) -> float:
@@ -103,6 +107,9 @@ class ServeStats:
     def summary(self) -> str:
         slo = "" if self.slo_s is None else \
             f" slo<={self.slo_s:.3g}s compliance={self.slo_compliance:.3f}"
+        if self.replica_failures or self.retries or self.gave_up:
+            slo += (f" | {self.replica_failures} replica failures, "
+                    f"{self.retries} retries, {self.gave_up} gave up")
         return (f"{self.completed}/{self.n_requests} req in "
                 f"{self.span_s:.3g}s | p50/p99 latency "
                 f"{self.p50_latency_s:.3g}/{self.p99_latency_s:.3g}s "
@@ -114,16 +121,24 @@ class ServeStats:
 
 def compute_serve_stats(records, trace: Optional[PowerTrace], *,
                         t0: float = 0.0, span: Optional[float] = None,
-                        slo_s: Optional[float] = None) -> ServeStats:
+                        slo_s: Optional[float] = None,
+                        replica_failures: int = 0) -> ServeStats:
     """Fold per-request records + the emitted trace window into one
     :class:`ServeStats`.  ``t0``/``span`` bound the energy integral to
     this replay's own bus emissions (a shared recorder carries earlier
-    phases too)."""
+    phases too).
+
+    Under fault injection the compliance denominator *degrades
+    honestly*: a request that exhausted its retry budget counts as an
+    SLO miss (``ok / (completed + gave_up)``) — identical to the plain
+    ratio when nothing was dropped."""
     done = [r for r in records if r.done_s is not None]
     lat = [r.done_s - r.arrival_s for r in done]
     ttft = [r.first_token_s - r.arrival_s for r in done
             if r.first_token_s is not None]
     wait = [r.admit_s - r.arrival_s for r in done if r.admit_s is not None]
+    gave_up = sum(1 for r in records if getattr(r, "gave_up", False))
+    retries = int(sum(getattr(r, "retries", 0) for r in records))
     energy = 0.0
     peak = 0.0
     if trace is not None:
@@ -133,8 +148,9 @@ def compute_serve_stats(records, trace: Optional[PowerTrace], *,
         if np.any(m):
             peak = float(np.max(trace.power_w[m]))
     compliance = 1.0
-    if slo_s is not None and lat:
-        compliance = float(np.mean(np.asarray(lat) <= slo_s))
+    if slo_s is not None and (lat or gave_up):
+        ok = int(np.sum(np.asarray(lat) <= slo_s)) if lat else 0
+        compliance = ok / max(len(lat) + gave_up, 1)
     return ServeStats(
         n_requests=len(records), completed=len(done),
         span_s=(max((r.done_s for r in done), default=0.0)
@@ -146,4 +162,6 @@ def compute_serve_stats(records, trace: Optional[PowerTrace], *,
         tokens_prompt=int(sum(r.prompt_len for r in done)),
         tokens_gen=int(sum(r.gen_len for r in done)),
         energy_j=energy, peak_power_w=peak,
-        slo_s=slo_s, slo_compliance=compliance)
+        slo_s=slo_s, slo_compliance=compliance,
+        retries=retries, gave_up=gave_up,
+        replica_failures=replica_failures)

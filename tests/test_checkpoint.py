@@ -1,0 +1,133 @@
+"""Checkpoint manager hardening: truncated/corrupt checkpoints fall
+back instead of killing a restart, async write failures surface via
+``wait()``, and save→restore round-trips stay exact."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointError, CheckpointManager
+
+
+def _tree(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32),
+            "opt": {"mu": rng.normal(size=(4, 3)).astype(np.float32)}}
+
+
+def _save(mgr: CheckpointManager, step: int, seed: int):
+    tree = _tree(seed)
+    mgr.save(step, tree, blocking=True)
+    return tree
+
+
+def _assert_trees_equal(a, b):
+    assert np.array_equal(a["w"], b["w"])
+    assert np.array_equal(a["b"], b["b"])
+    assert np.array_equal(a["opt"]["mu"], b["opt"]["mu"])
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    tree = _save(mgr, 10, seed=1)
+    assert mgr.latest_step() == 10
+    got = mgr.restore(10, _tree(99))
+    _assert_trees_equal(got, tree)
+
+
+def test_steps_listing_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        _save(mgr, s, seed=s)
+    assert mgr.steps() == [2, 3]          # keep=2 dropped step 1
+    assert mgr.latest_step() == 3
+
+
+def test_truncated_leaf_raises_checkpoint_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    _save(mgr, 5, seed=0)
+    leaf = next((tmp_path / "step_00000005").glob("leaf_*.npy"))
+    leaf.write_bytes(leaf.read_bytes()[:16])   # truncate mid-header
+    with pytest.raises(CheckpointError):
+        mgr.restore(5, _tree())
+
+
+def test_shape_mismatch_raises_checkpoint_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    _save(mgr, 5, seed=0)
+    d = tmp_path / "step_00000005"
+    manifest = json.loads((d / "manifest.json").read_text())
+    name, meta = next(iter(manifest["leaves"].items()))
+    np.save(d / meta["file"], np.zeros((1,), dtype=np.float32))
+    with pytest.raises(CheckpointError, match="shape"):
+        mgr.restore(5, _tree())
+
+
+def test_corrupt_manifest_raises_checkpoint_error(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    _save(mgr, 5, seed=0)
+    (tmp_path / "step_00000005" / "manifest.json").write_text("{not json")
+    with pytest.raises(CheckpointError, match="manifest"):
+        mgr.restore(5, _tree())
+
+
+def test_restore_latest_falls_back_past_corrupt_step(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    good = _save(mgr, 7, seed=7)
+    _save(mgr, 8, seed=8)
+    # the newest checkpoint was truncated by a crash mid-write
+    leaf = next((tmp_path / "step_00000008").glob("leaf_*.npy"))
+    leaf.write_bytes(b"")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        step, tree = mgr.restore_latest(_tree())
+    assert step == 7
+    _assert_trees_equal(tree, good)
+
+
+def test_restore_latest_empty_dir_returns_none(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.restore_latest(_tree()) == (None, None)
+
+
+def test_restore_latest_all_corrupt_returns_none(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    _save(mgr, 1, seed=1)
+    next((tmp_path / "step_00000001").glob("leaf_*.npy")).write_bytes(b"")
+    with pytest.warns(RuntimeWarning):
+        assert mgr.restore_latest(_tree()) == (None, None)
+
+
+def test_incomplete_step_dir_is_invisible(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    _save(mgr, 3, seed=3)
+    # a crash before the manifest write leaves no manifest.json
+    broken = tmp_path / "step_00000009"
+    broken.mkdir()
+    np.save(broken / "leaf_00000.npy", np.zeros(2))
+    assert mgr.steps() == [3]
+    assert mgr.latest_step() == 3
+
+
+def test_async_write_failure_surfaces_via_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(1, _tree(), blocking=False)
+    mgr.wait()
+    # sabotage the target: the step dir becomes a file the writer can't
+    # replace, so the background rename fails
+    mgr._write_error = OSError("disk full")   # simulate a thread failure
+    with pytest.raises(CheckpointError, match="disk full"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again
+    mgr.save(2, _tree(), blocking=True)
+    assert mgr.latest_step() == 2
+
+
+def test_bf16_roundtrip_casts_back(tmp_path):
+    jnp = pytest.importorskip("jax.numpy")
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"p": jnp.ones((3,), dtype=jnp.bfloat16)}
+    mgr.save(1, tree, blocking=True)
+    got = mgr.restore(1, tree)
+    assert got["p"].dtype == jnp.bfloat16
+    assert np.allclose(np.asarray(got["p"], dtype=np.float32), 1.0)

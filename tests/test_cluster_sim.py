@@ -241,7 +241,7 @@ def test_failure_truncates_and_requeues():
     fm = WeibullFailureModel(mtbf_s=1200.0, shape=1.0, repair_s=300.0)
     jobs = [Job("hero", 13.0, 3600.0)]
     res = simulate(jobs, topology=ClusterTopology(n_nodes=1), op=OP,
-                   dt_s=30.0, failure_model=fm, seed=0, max_requeues=50)
+                   dt_s=30.0, failure_model=fm, seed=3, max_requeues=50)
     assert res.stats.node_failures >= 1
     assert res.stats.requeues >= 1
     rec = res.records[0]

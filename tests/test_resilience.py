@@ -1,0 +1,404 @@
+"""Checkpoint/restart resilience layer: Daly-interval math, the
+progress-preserving failure path, eager-vs-lazy failure-draw identity,
+elastic restart, the storage trace component, and retry-aware serving
+under replica fault injection."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AttemptPlan, CheckpointPolicy, ClusterTopology,
+                           Job, daly_interval_s, job_state_bytes, run,
+                           simulate)
+from repro.cluster.resilience import DEFAULT_STORAGE_BW_BS, DEFAULT_WRITE_W
+from repro.distributed.fault import WeibullFailureModel
+from repro.power.model import OperatingPoint
+from test_cluster_sim import (assert_no_double_booking,
+                              assert_traces_identical, batch_order,
+                              _SIM_META)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                  # pragma: no cover
+    from _hypothesis_fallback import given, settings, strategies as st
+
+OP = OperatingPoint.green500()
+
+
+# -- Daly interval & cost model ----------------------------------------------
+
+
+def test_daly_interval_formula():
+    assert daly_interval_s(10.0, 3600.0) == pytest.approx(
+        math.sqrt(2.0 * 10.0 * 3600.0))
+    assert daly_interval_s(10.0, math.inf) == math.inf
+    assert daly_interval_s(0.0, 3600.0) == math.inf
+    assert daly_interval_s(10.0, 0.0) == math.inf
+
+
+def test_job_state_bytes_precedence():
+    assert job_state_bytes(Job("a", 13.0, 1.0)) == pytest.approx(13.0e9)
+    assert job_state_bytes(
+        Job("b", 13.0, 1.0, state_bytes=2.0e9)) == pytest.approx(2.0e9)
+    # explicit 0.0 = stateless, NOT a fallback to mem_gb
+    assert job_state_bytes(Job("c", 13.0, 1.0, state_bytes=0.0)) == 0.0
+
+
+def test_policy_interval_scales_with_node_span():
+    pol = CheckpointPolicy(min_interval_s=0.0)
+    job = Job("j", 13.0, 1.0)
+    t1 = pol.interval_for(job, n_nodes=1, mtbf_node_s=3.6e5)
+    t4 = pol.interval_for(job, n_nodes=4, mtbf_node_s=3.6e5)
+    # 4 nodes fail 4x as often → interval shrinks by 2
+    assert t4 == pytest.approx(t1 / 2.0)
+
+
+def test_policy_fixed_override_and_floor():
+    job = Job("j", 13.0, 1.0)
+    pol = CheckpointPolicy(interval_s=120.0)
+    assert pol.interval_for(job, mtbf_node_s=1.0) == 120.0
+    floor = CheckpointPolicy(interval_s=1.0, min_interval_s=30.0)
+    assert floor.interval_for(job) == 30.0
+    assert CheckpointPolicy().interval_for(job) == math.inf  # MTBF=∞
+    with pytest.raises(ValueError):
+        CheckpointPolicy(storage_bw_bs=0.0)
+    with pytest.raises(ValueError):
+        CheckpointPolicy(interval_s=-1.0)
+
+
+def test_stateless_job_never_checkpoints():
+    pol = CheckpointPolicy()
+    job = Job("serve", 13.0, 1.0, state_bytes=0.0)
+    assert pol.write_time_s(job) == 0.0
+    assert pol.interval_for(job, mtbf_node_s=100.0) == math.inf
+
+
+def test_write_time_from_bandwidth():
+    pol = CheckpointPolicy(storage_bw_bs=1.0e9)
+    assert pol.write_time_s(Job("j", 13.0, 1.0)) == pytest.approx(13.0)
+    assert DEFAULT_STORAGE_BW_BS > 0 and DEFAULT_WRITE_W >= 0
+
+
+# -- AttemptPlan timeline ----------------------------------------------------
+
+
+def test_attempt_plan_counts_and_duration():
+    # 100 s of work at τ=30, δ=5: ⌈100/30⌉−1 = 3 checkpoints, 15 s overhead
+    plan = AttemptPlan(100.0, 30.0, 5.0)
+    assert plan.n_checkpoints == 3
+    assert plan.overhead_s == pytest.approx(15.0)
+    assert plan.duration_s == pytest.approx(115.0)
+    # work an exact multiple of τ: no checkpoint at the very end
+    assert AttemptPlan(60.0, 30.0, 5.0).n_checkpoints == 1
+    assert AttemptPlan(30.0, 30.0, 5.0).n_checkpoints == 0
+    assert AttemptPlan(100.0, math.inf, 5.0).n_checkpoints == 0
+
+
+def test_attempt_plan_windows_and_clipping():
+    plan = AttemptPlan(100.0, 30.0, 5.0)
+    assert plan.checkpoint_windows() == [(30.0, 35.0), (65.0, 70.0),
+                                         (100.0, 105.0)]
+    # a kill mid-second-write truncates it (billed) and drops the third
+    assert plan.checkpoint_windows(until_s=67.0) == [(30.0, 35.0),
+                                                     (65.0, 67.0)]
+    assert plan.checkpoint_windows(until_s=30.0) == []
+
+
+def test_attempt_plan_progress_rounds_down():
+    plan = AttemptPlan(100.0, 30.0, 5.0)
+    # killed mid-write: the in-progress write preserves nothing
+    preserved, wasted = plan.progress_at(33.0)
+    assert preserved == 0.0 and wasted == pytest.approx(30.0)
+    # killed after the first write completes: 30 s durable
+    preserved, wasted = plan.progress_at(40.0)
+    assert preserved == pytest.approx(30.0)
+    assert wasted == pytest.approx(5.0)
+    # killed at the very start
+    assert plan.progress_at(0.0) == (0.0, 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(work=st.floats(1.0, 5000.0), tau=st.floats(5.0, 2000.0),
+       delta=st.floats(0.1, 60.0), frac=st.floats(0.0, 1.0))
+def test_attempt_plan_progress_invariants(work, tau, delta, frac):
+    plan = AttemptPlan(work, tau, delta)
+    e = frac * plan.duration_s
+    preserved, wasted = plan.progress_at(e)
+    assert 0.0 <= preserved <= work + 1e-9
+    assert wasted >= 0.0
+    assert preserved + wasted <= work + 1e-9
+    # preserved is always a whole number of τ-intervals
+    k = preserved / plan.tau_s if plan.tau_s > 0 else 0.0
+    assert abs(k - round(k)) < 1e-6
+
+
+# -- eager vs lazy failure draws ---------------------------------------------
+
+
+def test_sim_outages_match_eager_iterator():
+    fm = WeibullFailureModel(mtbf_s=1800.0, shape=1.0, repair_s=300.0)
+    top = ClusterTopology(n_nodes=3)
+    jobs = [Job(f"j{i}", 13.0, 4000.0) for i in range(6)]
+    res = simulate(jobs, topology=top, op=OP, dt_s=60.0, failure_model=fm,
+                   seed=11, max_requeues=100)
+    assert res.outages, "scenario must actually draw failures"
+    horizon = max(t for _, t, _ in res.outages)
+    eager = [o for o in fm.node_outages(11, top.n_nodes, horizon + 1e-9)]
+    # the sim's lazy per-repair draws replay the eager per-node streams
+    # draw-for-draw: every sim outage appears in the eager sequence
+    eager_set = {(n, round(a, 9), round(b, 9)) for n, a, b in eager}
+    for n, a, b in res.outages:
+        assert (n, round(a, 9), round(b, 9)) in eager_set
+
+
+def test_node_streams_are_per_node_stable():
+    fm = WeibullFailureModel(mtbf_s=900.0, shape=1.2, repair_s=100.0)
+    a = list(fm.node_outages(5, 4, 5000.0))
+    b = list(fm.node_outages(5, 4, 5000.0))
+    assert a == b
+    # node i's sequence is independent of n_nodes
+    solo = [(n, t0, t1) for n, t0, t1 in fm.node_outages(5, 1, 5000.0)]
+    first = [(n, t0, t1) for n, t0, t1 in a if n == 0]
+    assert solo == first
+
+
+@settings(max_examples=12, deadline=None)
+@given(mtbf=st.floats(200.0, 5000.0), shape=st.floats(0.7, 1.8))
+def test_weibull_outage_statistics(mtbf, shape):
+    fm = WeibullFailureModel(mtbf_s=mtbf, shape=shape, repair_s=10.0)
+    outs = list(fm.node_outages(3, 64, 40.0 * mtbf))
+    assert outs
+    # uptimes between outages average ≈ MTBF (renewal process)
+    ups = []
+    last = {}
+    for n, t0, t1 in outs:
+        ups.append(t0 - last.get(n, 0.0))
+        last[n] = t1
+    assert np.mean(ups) == pytest.approx(mtbf, rel=0.15)
+    assert all(t1 - t0 == pytest.approx(10.0) for _, t0, t1 in outs)
+
+
+# -- simulator integration ---------------------------------------------------
+
+
+_FM = WeibullFailureModel(mtbf_s=1200.0, shape=1.0, repair_s=300.0)
+
+
+def test_no_failure_oracle_stays_bit_identical_with_policy():
+    """MTBF=∞ ⇒ zero checkpoints ⇒ the checkpointed sim is bit-identical
+    to batch cluster.run(), including the component set (no storage)."""
+    top = ClusterTopology(n_nodes=2)
+    jobs = batch_order([Job(f"j{i}", 13.0, 300.0 + 41.0 * i)
+                        for i in range(10)])
+    batch = run(jobs, topology=top, op=OP, dt_s=13.0)
+    sim = simulate(jobs, topology=top, op=OP, dt_s=13.0, backfill=False,
+                   checkpoint=CheckpointPolicy(), elastic=True)
+    assert_traces_identical(sim.trace, batch.trace, ignore_meta=_SIM_META)
+    assert "storage" not in sim.trace.components
+    assert sim.stats.checkpoints == 0
+    assert sim.stats.wasted_energy_j == 0.0
+    assert sim.stats.wasted_node_s == 0.0
+    assert sim.stats.wasted_chip_s == 0.0
+    assert sim.stats.goodput == 1.0
+
+
+def test_checkpointing_preserves_progress():
+    jobs = [Job("hero", 13.0, 3600.0)]
+    top = ClusterTopology(n_nodes=1)
+    plain = simulate(jobs, topology=top, op=OP, dt_s=30.0,
+                     failure_model=_FM, seed=3, max_requeues=50)
+    ckpt = simulate(jobs, topology=top, op=OP, dt_s=30.0,
+                    failure_model=_FM, seed=3, max_requeues=50,
+                    checkpoint=CheckpointPolicy())
+    assert plain.stats.node_failures >= 1
+    assert ckpt.stats.checkpoints >= 1
+    # progress preservation strictly shortens the run and cuts the waste
+    assert ckpt.stats.makespan_s < plain.stats.makespan_s
+    assert ckpt.stats.wasted_chip_s < plain.stats.wasted_chip_s
+    assert ckpt.stats.goodput > plain.stats.goodput
+    # the storage component is on the trace and integrates to the stats
+    assert "storage" in ckpt.trace.components
+    storage_j = np.trapezoid(ckpt.trace.components["storage"], ckpt.trace.t)
+    assert storage_j == pytest.approx(ckpt.stats.checkpoint_energy_j,
+                                      rel=0.05)
+    rec = ckpt.records[0]
+    assert rec.state == "completed" and rec.progress == 1.0
+    assert rec.checkpoints == ckpt.stats.checkpoints
+
+
+def test_wasted_work_accounting_consistency():
+    jobs = [Job(f"j{i}", 13.0, 2500.0) for i in range(4)]
+    top = ClusterTopology(n_nodes=2)
+    res = simulate(jobs, topology=top, op=OP, dt_s=30.0, failure_model=_FM,
+                   seed=9, max_requeues=60, checkpoint=CheckpointPolicy())
+    st_ = res.stats
+    assert st_.node_failures >= 1
+    assert st_.wasted_chip_s >= st_.wasted_node_s >= 0.0
+    assert st_.wasted_energy_j >= 0.0
+    assert 0.0 <= st_.goodput <= 1.0
+    assert st_.checkpoint_overhead_s >= 0.0
+    # the RAPS block mentions the new rows
+    s = st_.summary()
+    assert "waste" in s and "goodput" in s and "ckpt" in s
+    assert_no_double_booking(res.schedule.placements, top.gpus_per_node)
+
+
+def test_elastic_restart_shrinks_requeued_round_robin_job():
+    """round_robin inflates a shardable job to node width; after its node
+    dies, elastic restart lands it on the one chip that is actually free
+    instead of stalling until the long repair completes."""
+    fm = WeibullFailureModel(mtbf_s=5000.0, shape=1.0, repair_s=12000.0)
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job("big", 13.0, 24000.0, shardable=True),
+            Job("f0", 13.0, 15000.0, shardable=False),
+            Job("f1", 13.0, 15000.0, shardable=False),
+            Job("f2", 13.0, 15000.0, shardable=False)]
+    kw = dict(topology=top, policy="round_robin", op=OP, dt_s=60.0,
+              failure_model=fm, seed=14, max_requeues=200,
+              checkpoint=CheckpointPolicy())
+    rigid = simulate(jobs, **kw)
+    elastic = simulate(jobs, **kw, elastic=True)
+    assert elastic.stats.node_failures >= 1
+    full_width = top.gpus_per_node
+    big_widths = {len(p.chips) for p in elastic.schedule.placements
+                  if p.job.name == "big"}
+    # the requeued attempt ran narrower than the round_robin batch width
+    assert any(w < full_width for w in big_widths)
+    assert full_width in big_widths          # ...but the first was full
+    assert elastic.stats.jobs_completed == len(jobs)
+    assert rigid.stats.jobs_completed == len(jobs)
+    assert elastic.stats.makespan_s < rigid.stats.makespan_s
+    assert_no_double_booking(elastic.schedule.placements, top.gpus_per_node)
+
+
+def test_daly_beats_naive_fixed_intervals_on_energy():
+    """The tentpole gate in miniature: under a seeded failure stream,
+    the Daly interval beats no-checkpointing and a too-frequent fixed
+    interval on energy-to-completion."""
+    fm = WeibullFailureModel(mtbf_s=4000.0, shape=1.0, repair_s=300.0)
+    top = ClusterTopology(n_nodes=2)
+    jobs = [Job(f"j{i}", 13.0, 6000.0) for i in range(8)]
+
+    def energy(checkpoint):
+        r = simulate(jobs, topology=top, op=OP, dt_s=120.0,
+                     failure_model=fm, seed=3, max_requeues=300,
+                     checkpoint=checkpoint)
+        assert r.stats.jobs_completed == len(jobs)
+        return r.stats.energy_j
+
+    e_none = energy(None)
+    e_daly = energy(CheckpointPolicy())
+    e_spam = energy(CheckpointPolicy(interval_s=30.0))
+    assert e_daly < e_none
+    assert e_daly < e_spam
+
+
+# -- serve retry layer -------------------------------------------------------
+
+
+def _serve_setup():
+    from repro.serve import ServeCostModel, poisson_trace
+    cost = ServeCostModel(max_batch=8, gen=256, smoke=False)
+    reqs = poisson_trace(300, rate_per_s=20.0, seed=0, gen_lens=(256,))
+    return cost, reqs
+
+
+def test_serve_failures_inject_retries():
+    from repro.serve import AutoscalePolicy, RetryPolicy, run_fleet
+    cost, reqs = _serve_setup()
+    pol = AutoscalePolicy(n_max=4, n_min=2, dt_ctrl_s=2.0)
+    fm = WeibullFailureModel(mtbf_s=15.0, shape=1.0, repair_s=5.0)
+    base = run_fleet(cost, reqs, pol, slo_s=2.0)
+    faulty = run_fleet(cost, reqs, pol, slo_s=2.0, failures=fm,
+                       retry=RetryPolicy(max_retries=2), failure_seed=7)
+    assert faulty.stats.replica_failures >= 1
+    assert faulty.stats.retries >= 1
+    assert faulty.outages
+    # every request is terminal: completed or gave up
+    assert all(r.done_s is not None or r.gave_up for r in faulty.records)
+    assert faulty.stats.completed + faulty.stats.gave_up == len(reqs)
+    # degraded but honest: compliance never *improves* under failures
+    assert faulty.stats.slo_compliance <= base.stats.slo_compliance + 1e-12
+    assert faulty.stats.p99_latency_s >= base.stats.p99_latency_s - 1e-12
+    # same seed replays exactly
+    again = run_fleet(cost, reqs, pol, slo_s=2.0, failures=fm,
+                      retry=RetryPolicy(max_retries=2), failure_seed=7)
+    assert again.stats == faulty.stats
+
+
+def test_serve_no_failure_path_is_untouched():
+    from repro.serve import AutoscalePolicy, run_fleet
+    cost, reqs = _serve_setup()
+    pol = AutoscalePolicy(n_max=3, n_min=1, dt_ctrl_s=2.0)
+    a = run_fleet(cost, reqs, pol, slo_s=2.0)
+    b = run_fleet(cost, reqs, pol, slo_s=2.0)
+    assert np.array_equal(a.trace.t, b.trace.t)
+    assert np.array_equal(a.trace.power_w, b.trace.power_w)
+    assert a.stats == b.stats
+    assert a.stats.retries == 0 and a.stats.gave_up == 0
+    assert a.stats.replica_failures == 0 and a.outages == []
+
+
+def test_serve_retry_budget_exhaustion_drops_requests():
+    from repro.serve import AutoscalePolicy, RetryPolicy, run_fleet
+    cost, reqs = _serve_setup()
+    pol = AutoscalePolicy(n_max=2, n_min=2, dt_ctrl_s=2.0)
+    fm = WeibullFailureModel(mtbf_s=4.0, shape=1.0, repair_s=6.0)
+    res = run_fleet(cost, reqs, pol, slo_s=2.0, failures=fm,
+                    retry=RetryPolicy(max_retries=0), failure_seed=3)
+    assert res.stats.replica_failures >= 1
+    assert res.stats.gave_up >= 1
+    # gave-up requests depress compliance (the denominator is honest)
+    done = [r for r in res.records if r.done_s is not None]
+    lat = [r.done_s - r.arrival_s for r in done]
+    ok = sum(1 for v in lat if v <= 2.0)
+    expect = ok / (len(done) + res.stats.gave_up)
+    assert res.stats.slo_compliance == pytest.approx(expect)
+
+
+def test_retry_policy_backoff_caps():
+    from repro.serve import RetryPolicy
+    rp = RetryPolicy(max_retries=5, backoff_s=0.5, backoff_cap_s=4.0)
+    assert rp.delay_s(1) == 0.5
+    assert rp.delay_s(2) == 1.0
+    assert rp.delay_s(4) == 4.0
+    assert rp.delay_s(10) == 4.0
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_s=0.0)
+
+
+# -- slow fault-injection sweep (bench-smoke CI leg) -------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_fault_injection_sweep_invariants(seed):
+    """Many-seed requeue/checkpoint invariants: every job terminal, no
+    chip double-booked, energy above the idle floor, accounting sane."""
+    from repro.power.layers import NodeModel
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(1, 4))
+    top = ClusterTopology(n_nodes=n_nodes)
+    jobs = [Job(f"j{i}", 13.0, float(rng.uniform(500.0, 6000.0)))
+            for i in range(int(rng.integers(2, 12)))]
+    fm = WeibullFailureModel(mtbf_s=float(rng.uniform(900.0, 5000.0)),
+                             shape=float(rng.uniform(0.7, 1.8)),
+                             repair_s=300.0)
+    ckpt = CheckpointPolicy() if seed % 2 == 0 else \
+        CheckpointPolicy(interval_s=float(rng.uniform(60.0, 1200.0)))
+    res = simulate(jobs, topology=top, op=OP, dt_s=60.0, failure_model=fm,
+                   seed=seed, max_requeues=100, checkpoint=ckpt,
+                   elastic=bool(seed % 3 == 0))
+    st_ = res.stats
+    assert st_.jobs_completed + st_.jobs_dropped == len(jobs)
+    assert 0.0 <= st_.utilization <= 1.0 + 1e-9
+    assert 0.0 <= st_.goodput <= 1.0
+    assert st_.wasted_chip_s >= 0.0 and st_.wasted_energy_j >= 0.0
+    assert st_.checkpoints >= 0
+    assert_no_double_booking(res.schedule.placements, top.gpus_per_node)
+    idle_w = (NodeModel().power(OP, load=0.0) * n_nodes + top.network_w)
+    assert st_.energy_j >= idle_w * res.trace.duration * (1 - 1e-9)
+    for rec in res.records:
+        assert rec.state in ("completed", "dropped")
+        assert 0.0 <= rec.completed_fraction <= 1.0
